@@ -1,0 +1,45 @@
+"""Paper Figs 10-11: reinstate time vs data size S_d = 2^n KB, n = 19..31,
+agent vs core, Z = 10 (as in the paper)."""
+from __future__ import annotations
+
+from benchmarks.common import reinstate_trials, write_csv
+
+CLUSTERS = ["acet", "brasdor", "glooscap", "placentia"]
+NS = [19, 21, 23, 24, 25, 27, 29, 31]
+
+
+def run(trials: int = 30):
+    rows = []
+    for mech in ("agent", "core"):
+        for cl in CLUSTERS:
+            for n in NS:
+                sd = (2 ** n) * 1024
+                mean, std, staging = reinstate_trials(mech, cl, 10, sd, sd, trials)
+                rows.append(
+                    dict(mechanism=mech, cluster=cl, n=n, s_d_bytes=sd,
+                         reinstate_mean_s=round(mean, 5),
+                         reinstate_std_s=round(std, 5),
+                         staging_overhead_s=round(staging, 3))
+                )
+    path = write_csv("fig10_11_datasize.csv", rows)
+    at = {(r["mechanism"], r["cluster"], r["n"]): r["reinstate_mean_s"] for r in rows}
+    checks = {
+        # Rule 2 region: agent <= core for S_d <= 2^24 KB
+        "agent_beats_core_small_Sd_placentia": all(
+            at[("agent", "placentia", n)] <= at[("core", "placentia", n)] + 0.12
+            for n in (19, 21, 23, 24)
+        ),
+        "reinstate_sub_second_placentia": all(
+            at[(m, "placentia", n)] < 1.0 for m in ("agent", "core") for n in NS
+        ),
+        "mild_growth_with_Sd": (at[("agent", "placentia", 31)]
+                                 - at[("agent", "placentia", 19)]) < 0.2,
+    }
+    return path, rows, checks
+
+
+if __name__ == "__main__":
+    path, rows, checks = run()
+    print(path)
+    for k, v in checks.items():
+        print(f"  {k}: {'PASS' if v else 'FAIL'}")

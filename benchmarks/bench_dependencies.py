@@ -1,0 +1,49 @@
+"""Paper Figs 8-9: reinstate time vs number of dependencies Z (3..63),
+agent vs core intelligence, on all four cluster profiles. Also produces the
+beyond-paper 'agent_batched' curve (grouped dependency re-establishment).
+
+S_d fixed at 2^24 KB as in the paper's figures."""
+from __future__ import annotations
+
+from benchmarks.common import reinstate_trials, write_csv
+
+CLUSTERS = ["acet", "brasdor", "glooscap", "placentia"]
+ZS = [3, 5, 10, 15, 20, 25, 30, 40, 50, 63]
+S_D = (2 ** 24) * 1024
+
+
+def run(trials: int = 30):
+    rows = []
+    for mech in ("agent", "core", "agent_batched"):
+        for cl in CLUSTERS:
+            for z in ZS:
+                mean, std, _ = reinstate_trials(mech, cl, z, S_D, S_D, trials)
+                rows.append(
+                    dict(mechanism=mech, cluster=cl, Z=z,
+                         reinstate_mean_s=round(mean, 5), reinstate_std_s=round(std, 5))
+                )
+    path = write_csv("fig8_9_dependencies.csv", rows)
+
+    # paper-claim checks (Rule 1 region & magnitude)
+    at = {(r["mechanism"], r["cluster"], r["Z"]): r["reinstate_mean_s"] for r in rows}
+    checks = {
+        "core_beats_agent_at_Z<=10_placentia": all(
+            at[("core", "placentia", z)] < at[("agent", "placentia", z)] for z in (3, 5, 10)
+        ),
+        "agent_Z50_under_0.55s_placentia": at[("agent", "placentia", 50)] < 0.55,
+        "core_Z50_under_0.5s_placentia": at[("core", "placentia", 50)] < 0.5,
+        "acet_slowest_for_agent": all(
+            at[("agent", "acet", z)] >= max(at[("agent", c, z)] for c in CLUSTERS[1:])
+            for z in (10, 50)
+        ),
+        "batched_flat_in_Z": (at[("agent_batched", "placentia", 63)]
+                              - at[("agent_batched", "placentia", 3)]) < 0.02,
+    }
+    return path, rows, checks
+
+
+if __name__ == "__main__":
+    path, rows, checks = run()
+    print(path)
+    for k, v in checks.items():
+        print(f"  {k}: {'PASS' if v else 'FAIL'}")

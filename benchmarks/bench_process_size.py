@@ -1,0 +1,42 @@
+"""Paper Figs 12-13: reinstate time vs process size S_p = 2^n KB
+(proportional to input data), Z = 10."""
+from __future__ import annotations
+
+from benchmarks.common import reinstate_trials, write_csv
+
+CLUSTERS = ["acet", "brasdor", "glooscap", "placentia"]
+NS = [19, 21, 23, 24, 25, 26, 27, 29, 31]
+
+
+def run(trials: int = 30):
+    rows = []
+    for mech in ("agent", "core"):
+        for cl in CLUSTERS:
+            for n in NS:
+                sp = (2 ** n) * 1024
+                mean, std, _ = reinstate_trials(mech, cl, 10, sp, sp, trials)
+                rows.append(
+                    dict(mechanism=mech, cluster=cl, n=n, s_p_bytes=sp,
+                         reinstate_mean_s=round(mean, 5), reinstate_std_s=round(std, 5))
+                )
+    path = write_csv("fig12_13_process_size.csv", rows)
+    at = {(r["mechanism"], r["cluster"], r["n"]): r["reinstate_mean_s"] for r in rows}
+    checks = {
+        # Rule 3 region
+        "agent_beats_core_small_Sp_placentia": all(
+            at[("agent", "placentia", n)] <= at[("core", "placentia", n)] + 0.12
+            for n in (19, 23, 24)
+        ),
+        "placentia_best_large_Sp": all(
+            at[("core", "placentia", n)] <= min(at[("core", c, n)] for c in CLUSTERS[:3])
+            for n in (27, 29, 31)
+        ),
+    }
+    return path, rows, checks
+
+
+if __name__ == "__main__":
+    path, rows, checks = run()
+    print(path)
+    for k, v in checks.items():
+        print(f"  {k}: {'PASS' if v else 'FAIL'}")

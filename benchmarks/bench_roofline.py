@@ -1,0 +1,59 @@
+"""Deliverable (g): aggregate the dry-run JSONs into the roofline table —
+per (arch x shape x mesh): three terms, dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPS ratio, memory fit."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+
+
+def run(dryrun_dir: str = "experiments/dryrun", variant: str = "baseline"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*.{variant}.json"))):
+        r = json.load(open(path))
+        if "error" in r:
+            rows.append(dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                             status="ERROR"))
+            continue
+        if "skipped" in r:
+            rows.append(dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                             status="skipped-by-design"))
+            continue
+        rf = r["roofline"]
+        rows.append(
+            dict(
+                arch=r["arch"],
+                shape=r["shape"],
+                mesh=r["mesh"],
+                status="ok",
+                compute_s=round(rf["compute_s"], 4),
+                memory_s=round(rf["memory_s"], 4),
+                collective_s=round(rf["collective_s"], 4),
+                bottleneck=rf["bottleneck"],
+                roofline_fraction=round(rf["roofline_fraction"], 4),
+                useful_compute_ratio=round(r.get("useful_compute_ratio", 0), 3),
+                peak_mem_GB=round(r["memory"]["peak_per_device"] / 1e9, 2),
+                fits_16GB=r["memory"]["fits_hbm"],
+                compile_s=round(r.get("compile_s", 0), 1),
+            )
+        )
+    path = write_csv(f"roofline_{variant}.csv", rows)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    checks = {
+        "all_cells_compiled_or_skipped": all(r["status"] != "ERROR" for r in rows),
+        "n_ok_cells": len(ok),
+    }
+    return path, rows, checks
+
+
+if __name__ == "__main__":
+    path, rows, checks = run()
+    print(path)
+    for r in rows:
+        if r.get("status") == "ok":
+            print(f"  {r['arch']:20s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"{r['bottleneck']:10s} frac={r['roofline_fraction']}")
+    print(checks)

@@ -1,0 +1,76 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+OUT_DIR = os.environ.get("BENCH_OUT", "bench_out")
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    if rows:
+        fields = []
+        for r in rows:
+            for k in r:
+                if k not in fields:
+                    fields.append(k)
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def reinstate_trials(
+    mechanism: str,
+    profile: str,
+    z: int,
+    s_d_bytes: int,
+    s_p_bytes: int,
+    trials: int = 30,
+    payload_elems: int = 1 << 14,
+):
+    """Mean/std reinstate time over `trials` REAL migrations (paper: mean of
+    30 trials). The in-process payload is a stand-in; the modelled metadata
+    term is scaled to the experiment's S_p (see sim.measure_micro)."""
+    from repro.core.agent import Agent
+    from repro.core.migration import DependencyGraph, META_LOG_COEF
+    from repro.core.runtime import ClusterRuntime
+    from repro.core.virtual_core import VirtualCore
+    from repro.core.cluster import get_profile
+
+    prof = get_profile(profile)
+    speed = max(prof.node_speed, 0.1)
+    times = []
+    staging = []
+    for t in range(trials):
+        rt = ClusterRuntime(n_hosts=8, n_spares=2, profile=profile, seed=t)
+        g = DependencyGraph()
+        for e in range(z):  # exactly Z edges on node 0
+            peer = 1 + (e % 6)
+            if e % 2 == 0:
+                g.in_edges.setdefault(0, []).append(peer)
+                g.out_edges.setdefault(peer, []).append(0)
+            else:
+                g.out_edges.setdefault(0, []).append(peer)
+                g.in_edges.setdefault(peer, []).append(0)
+        rt.graph = g
+        payload = {"partial": np.zeros(payload_elems, np.float32), "cursor": t}
+        rt.occupy(0, payload, "bench")
+        if mechanism == "agent":
+            rep = Agent(0, 0, payload).migrate(rt)
+        elif mechanism == "agent_batched":
+            rep = Agent(0, 0, payload).migrate(rt, batched_deps=True)
+        else:
+            rep = VirtualCore(0, 0).migrate_job(rt)
+        assert rep["hash_ok"]
+        meta_measured = META_LOG_COEF * np.log2(max(rep["bytes"], 2)) / speed
+        meta_target = META_LOG_COEF * np.log2(max(s_p_bytes, 2)) / speed
+        times.append(rep["reinstate_s"] - meta_measured + meta_target)
+        staging.append(s_d_bytes / prof.node_bw + s_d_bytes / prof.ser_bytes_per_s)
+    return float(np.mean(times)), float(np.std(times)), float(np.mean(staging))

@@ -1,0 +1,69 @@
+"""Benchmark driver: one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call = mean wall time
+per produced row) and a PASS/FAIL line per paper-claim check.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_dependencies,
+        bench_datasize,
+        bench_process_size,
+        bench_table1,
+        bench_table2,
+        bench_prediction,
+        bench_ft_trainer,
+        bench_fig15,
+        bench_roofline,
+    )
+
+    benches = [
+        ("fig8_9_dependencies", bench_dependencies.run),
+        ("fig10_11_datasize", bench_datasize.run),
+        ("fig12_13_process_size", bench_process_size.run),
+        ("table1", bench_table1.run),
+        ("table2", bench_table2.run),
+        ("prediction", bench_prediction.run),
+        ("ft_trainer_real", bench_ft_trainer.run),
+        ("fig15_states", bench_fig15.run),
+        ("roofline", bench_roofline.run),
+    ]
+
+    print("name,us_per_call,derived")
+    all_checks = {}
+    failed = False
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            path, rows, checks = fn()
+            dt = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+            print(f"{name},{dt:.1f},{path}")
+            for k, v in checks.items():
+                all_checks[f"{name}.{k}"] = v
+        except Exception as e:
+            failed = True
+            print(f"{name},ERROR,{e}")
+            traceback.print_exc()
+
+    print("\n# paper-claim checks")
+    npass = ntotal = 0
+    for k, v in all_checks.items():
+        if isinstance(v, (bool,)) or type(v).__name__ == "bool_":
+            ntotal += 1
+            npass += int(bool(v))
+            print(f"{k}: {'PASS' if v else 'FAIL'}")
+        else:
+            print(f"{k}: {v}")
+    print(f"\n{npass}/{ntotal} checks passed")
+    if failed or npass < ntotal:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Serving example: batched prefill + autoregressive decode with the KV
+cache / recurrent-state machinery, on a reduced config of any assigned
+architecture (including the attention-free and hybrid ones).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b --new-tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_archs, get_arch
+from repro.models import build_model
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=sorted(all_archs()))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = build_model(cfg)
+    _, init_state, *_ = make_train_step(model)
+    params = init_state(jax.random.key(0))["params"]
+
+    B, S, N = args.batch, args.prompt_len, args.new_tokens
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)}
+    if cfg.num_img_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.num_img_tokens, cfg.d_model), jnp.float32)
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=S + N))
+    decode = jax.jit(lambda p, t, pos, c: model.decode(p, t, pos, c))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(N - 1):
+        logits, caches = decode(params, tok, jnp.int32(S + i), caches)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"{args.arch} (reduced): prefill {B}x{S} in {t_prefill*1e3:.1f} ms; "
+          f"{N-1} decode steps in {t_dec*1e3:.1f} ms "
+          f"({(N-1)*B/max(t_dec,1e-9):.0f} tok/s on 1 CPU core)")
+    print("generated token ids (row 0):", gen[0].tolist())
+    assert gen.shape == (B, N)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

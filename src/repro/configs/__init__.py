@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ArchConfig,
+    ShapeCfg,
+    SHAPES,
+    applicable,
+    all_archs,
+    get_arch,
+    register,
+)

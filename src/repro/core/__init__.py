@@ -1,0 +1,20 @@
+"""The paper's contribution: multi-agent proactive fault tolerance.
+
+Approach 1 (agent intelligence)  -> repro.core.agent
+Approach 2 (core intelligence)   -> repro.core.virtual_core
+Approach 3 (hybrid + Rules 1-3)  -> repro.core.hybrid / repro.core.rules
+Failure prediction (29%/64%)     -> repro.core.predictor
+Checkpointing baselines          -> repro.core.checkpoint
+Tables 1-2 simulator             -> repro.core.sim
+Real-training integration        -> repro.core.trainer
+Elastic re-meshing / stragglers  -> repro.core.elastic / repro.core.straggler
+"""
+from repro.core.agent import Agent
+from repro.core.virtual_core import VirtualCore
+from repro.core.hybrid import HybridUnit
+from repro.core.rules import decide, negotiate, Decision
+from repro.core.runtime import ClusterRuntime
+from repro.core.predictor import FailurePredictor
+from repro.core.failure import FailureModel, FailureEvent
+from repro.core.checkpoint import CheckpointStore, AsyncCheckpointer
+from repro.core.trainer import FTTrainer, FTReport

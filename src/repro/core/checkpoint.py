@@ -1,0 +1,205 @@
+"""Checkpointing: the paper's reactive baselines + beyond-paper variants.
+
+Real, runnable implementation (atomic manifest-based pytree store with
+content hashes) used by the FT trainer and tests; cluster-scale wire/server
+times are modelled from the profile and reported separately, mirroring the
+paper's three baselines:
+
+  * centralised, single server   (Table 1: overhead 8:05, reinstate 14:08)
+  * centralised, multiple servers (overhead 9:14 — coordination overhead)
+  * decentralised, multiple servers (overhead 6:44 — nearest server)
+
+Beyond-paper variants:
+  * async    — snapshot-to-RAM inside the step boundary, background write
+               (hides the write behind compute);
+  * incremental — writes only leaves whose content hash changed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.cluster import ClusterProfile
+from repro.utils.tree import tree_bytes, tree_hash
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    names = [f"leaf_{i:05d}" for i in range(len(flat))]
+    return flat, names, treedef
+
+
+class CheckpointStore:
+    """Atomic on-disk pytree checkpoints: <dir>/step_N/{manifest.json, *.npy}."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def save(self, state, step: int, incremental_against: Optional[int] = None) -> Dict:
+        t0 = time.perf_counter()
+        flat, names, treedef = _flatten_with_names(state)
+        arrs = [np.asarray(x) for x in flat]
+        hashes = [tree_hash(a) for a in arrs]
+
+        prev_hashes = {}
+        if incremental_against is not None:
+            prev = self._manifest(incremental_against)
+            if prev:
+                prev_hashes = dict(zip(prev["names"], prev["hashes"]))
+
+        tmp = tempfile.mkdtemp(dir=self.root)
+        written = reused = 0
+        written_bytes = 0
+        for name, arr, h in zip(names, arrs, hashes):
+            if prev_hashes.get(name) == h:
+                # reuse previous step's file (hard link keeps it atomic)
+                src = os.path.join(self.root, f"step_{incremental_against}", name + ".npy")
+                os.link(src, os.path.join(tmp, name + ".npy"))
+                reused += 1
+            else:
+                np.save(os.path.join(tmp, name + ".npy"), arr)
+                written += 1
+                written_bytes += arr.nbytes
+        manifest = {
+            "step": step,
+            "names": names,
+            "hashes": hashes,
+            "total_bytes": int(sum(a.nbytes for a in arrs)),
+            "written_bytes": int(written_bytes),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(self.root, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        return {
+            "measured_s": time.perf_counter() - t0,
+            "bytes": manifest["total_bytes"],
+            "written_bytes": written_bytes,
+            "written": written,
+            "reused": reused,
+        }
+
+    def _manifest(self, step: int) -> Optional[Dict]:
+        p = os.path.join(self.root, f"step_{step}", "manifest.json")
+        if not os.path.exists(p):
+            return None
+        return json.load(open(p))
+
+    def latest_step(self) -> Optional[int]:
+        steps = [
+            int(d.split("_", 1)[1])
+            for d in os.listdir(self.root)
+            if d.startswith("step_") and os.path.exists(os.path.join(self.root, d, "manifest.json"))
+        ]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, treedef_like) -> Tuple[object, Dict]:
+        t0 = time.perf_counter()
+        man = self._manifest(step)
+        assert man is not None, f"no checkpoint at step {step}"
+        flat = [
+            np.load(os.path.join(self.root, f"step_{step}", n + ".npy"))
+            for n in man["names"]
+        ]
+        _, _, treedef = _flatten_with_names(treedef_like)
+        state = jax.tree.unflatten(treedef, flat)
+        # verify content
+        ok = all(tree_hash(np.asarray(a)) == h for a, h in zip(flat, man["hashes"]))
+        return state, {
+            "measured_s": time.perf_counter() - t0,
+            "bytes": man["total_bytes"],
+            "hash_ok": ok,
+        }
+
+
+@dataclass
+class CheckpointPolicyCfg:
+    kind: str  # central_single | central_multi | decentral
+    period_s: float = 3600.0
+    n_servers: int = 1
+    asynchronous: bool = False
+    incremental: bool = False
+
+
+def modelled_checkpoint_overhead_s(
+    cfg: CheckpointPolicyCfg, profile: ClusterProfile, total_bytes: int, n_nodes: int
+) -> float:
+    """Cluster-scale time to create one checkpoint (paper 'overhead time').
+
+    central_single: every node's shard funnels into one server.
+    central_multi: k servers but extra coordination/replication (paper
+      measured this SLOWER than single: 9:14 vs 8:05 — replication cost).
+    decentral: nearest server per node — parallel, no central funnel.
+    """
+    per_node = total_bytes / max(n_nodes, 1)
+    coord = 2 * profile.msg_latency_s * n_nodes
+    if cfg.kind == "central_single":
+        t = total_bytes / profile.ckpt_server_bw + coord
+    elif cfg.kind == "central_multi":
+        repl = 1.14  # replication/coordination overhead (paper ratio 9:14/8:05)
+        t = total_bytes / profile.ckpt_server_bw * repl + 2 * coord
+    elif cfg.kind == "decentral":
+        # nearest server per node: shorter path, less funnelling (paper:
+        # 6:44 vs 8:05 — a ~1.2x effective-bandwidth win, not k-parallel)
+        t = total_bytes / (profile.ckpt_server_bw * 1.2) + 3 * coord
+    else:
+        raise ValueError(cfg.kind)
+    if cfg.asynchronous:
+        # only the RAM snapshot blocks the job; write overlaps compute
+        t = per_node / (profile.ser_bytes_per_s * 0.5) + coord
+    return t
+
+
+def modelled_restore_s(
+    cfg: CheckpointPolicyCfg, profile: ClusterProfile, total_bytes: int, n_nodes: int
+) -> float:
+    """Cluster-scale time to reinstate from a checkpoint (paper 14:08 /
+    15:27): pull shards back, respawn processes, rebuild communicators."""
+    respawn = profile.proc_spawn_s * n_nodes + 60.0 / max(profile.node_speed, 0.2)
+    if cfg.kind == "decentral":
+        # find the server nearest the failed node first (paper: reinstate
+        # 15:27 vs centralised 14:08)
+        lookup = 79.0 / max(profile.node_speed, 0.2)
+        return total_bytes / profile.ckpt_restore_bw + respawn + lookup
+    return total_bytes / profile.ckpt_restore_bw + respawn
+
+
+class AsyncCheckpointer:
+    """Snapshot in the step boundary; write in a background thread."""
+
+    def __init__(self, store: CheckpointStore):
+        self.store = store
+        self._thread: Optional[threading.Thread] = None
+        self.reports: List[Dict] = []
+
+    def save_async(self, state, step: int, incremental_against=None) -> float:
+        t0 = time.perf_counter()
+        snap = jax.tree.map(lambda x: np.array(x, copy=True), state)
+        block_s = time.perf_counter() - t0
+        self.wait()
+
+        def _write():
+            rep = self.store.save(snap, step, incremental_against)
+            rep["block_s"] = block_s
+            self.reports.append(rep)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        return block_s
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

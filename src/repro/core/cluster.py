@@ -1,0 +1,94 @@
+"""Cluster profiles.
+
+The paper evaluates on four clusters (ACET, Brasdor, Glooscap, Placentia).
+We keep the same four profiles — preserving their relative ordering of
+latency/bandwidth/node speed — plus a modern TPU-pod profile for the
+adaptation. Constants marked [calibrated] are fitted so the discrete-event
+simulator reproduces the paper's Table 1 macro numbers (checkpoint overhead
+8:05, checkpoint reinstate 14:08 for the 512 MB genome job on 4 nodes);
+constants marked [measured] come from the in-process implementation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class ClusterProfile:
+    name: str
+    # control plane
+    msg_latency_s: float  # one-way small-message latency
+    proc_spawn_s: float  # dynamic process creation (MPI_COMM_SPAWN-like)
+    # data plane
+    node_bw: float  # B/s host NIC bandwidth
+    ckpt_server_bw: float  # B/s effective stable-storage write bw [calibrated]
+    ckpt_restore_bw: float = 2.0e6  # B/s restore path (read + job rebuild) [calibrated]
+    # compute
+    node_speed: float = 1.0  # relative (1.0 = Placentia)
+    # serialization cost per byte (pack/unpack) [measured on this container,
+    # scaled by node_speed]
+    ser_bytes_per_s: float = 2.0e9
+
+
+# Paper-era clusters. Latencies/bandwidths use the hardware the paper lists
+# (GigE for ACET/Brasdor, InfiniBand for Glooscap/Placentia); server
+# bandwidth is calibrated to Table 1 overhead/reinstate times.
+PROFILES: Dict[str, ClusterProfile] = {
+    "acet": ClusterProfile(
+        name="acet",
+        msg_latency_s=120e-6,
+        proc_spawn_s=0.28,
+        node_bw=100e6,
+        ckpt_server_bw=2.8e6,
+        ckpt_restore_bw=1.70e6,
+        node_speed=0.35,
+        ser_bytes_per_s=0.7e9,
+    ),
+    "brasdor": ClusterProfile(
+        name="brasdor",
+        msg_latency_s=90e-6,
+        proc_spawn_s=0.20,
+        node_bw=110e6,
+        ckpt_server_bw=3.0e6,
+        ckpt_restore_bw=1.85e6,
+        node_speed=0.7,
+        ser_bytes_per_s=1.4e9,
+    ),
+    "glooscap": ClusterProfile(
+        name="glooscap",
+        msg_latency_s=12e-6,
+        proc_spawn_s=0.14,
+        node_bw=1.4e9,
+        ckpt_server_bw=3.1e6,
+        ckpt_restore_bw=1.95e6,
+        node_speed=0.9,
+        ser_bytes_per_s=1.8e9,
+    ),
+    "placentia": ClusterProfile(
+        name="placentia",
+        msg_latency_s=8e-6,
+        proc_spawn_s=0.10,
+        node_bw=1.8e9,
+        ckpt_server_bw=3.32e6,
+        ckpt_restore_bw=2.045e6,
+        node_speed=1.0,
+        ser_bytes_per_s=2.0e9,
+    ),
+    # Modern target: TPU v5e pod slice. ICI for neighbour egress, DCN for
+    # checkpoint servers. Spawn = workload re-schedule on a spare host.
+    "tpu_pod": ClusterProfile(
+        name="tpu_pod",
+        msg_latency_s=2e-6,
+        proc_spawn_s=0.05,
+        node_bw=50e9,
+        ckpt_server_bw=2e9,
+        ckpt_restore_bw=4e9,
+        node_speed=40.0,
+        ser_bytes_per_s=20e9,
+    ),
+}
+
+
+def get_profile(name: str) -> ClusterProfile:
+    return PROFILES[name]

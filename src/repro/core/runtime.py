@@ -1,0 +1,98 @@
+"""Cluster runtime: virtual hosts, landscape knowledge, spare selection.
+
+The unit of failure is a host/core; each host owns a *shard* (the sub-job
+payload: partial results, model state slice, data cursor). Agents and
+virtual cores both live on top of this runtime — they differ in who probes,
+who moves, and how dependencies are re-established (see agent.py /
+virtual_core.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.cluster import ClusterProfile, get_profile
+from repro.core.heartbeat import HeartbeatService
+from repro.core.migration import DependencyGraph
+from repro.core.predictor import FailurePredictor
+
+
+@dataclass
+class VirtualHost:
+    hid: int
+    shard: object = None
+    is_spare: bool = True
+    owner: Optional[str] = None  # "agent:<i>" | "core:<i>" | None
+
+
+class ClusterRuntime:
+    def __init__(
+        self,
+        n_hosts: int,
+        n_spares: int = 2,
+        profile: str | ClusterProfile = "placentia",
+        graph: Optional[DependencyGraph] = None,
+        seed: int = 0,
+    ):
+        self.profile = get_profile(profile) if isinstance(profile, str) else profile
+        self.hosts: Dict[int, VirtualHost] = {
+            i: VirtualHost(i) for i in range(n_hosts + n_spares)
+        }
+        self.n_active = n_hosts
+        self.spares: List[int] = list(range(n_hosts, n_hosts + n_spares))
+        self.heartbeats = HeartbeatService(n_hosts + n_spares, seed=seed)
+        self.graph = graph or DependencyGraph.reduction_tree(n_hosts)
+        self.predictor: Optional[FailurePredictor] = None
+        self.events: List[dict] = []
+
+    # --- landscape knowledge (paper: agent knows its core + vicinity) -----
+    def neighbours(self, hid: int) -> List[int]:
+        return self.heartbeats.neighbours(hid)
+
+    def healthy(self, hid: int) -> bool:
+        return self.heartbeats.alive(hid)
+
+    def neighbour_predictions(self, hid: int) -> Dict[int, bool]:
+        """Gather failure predictions from adjacent hosts' probes (the paper's
+        failure-scenario refinement: the adjacent core may also fail)."""
+        out = {}
+        for nb in self.neighbours(hid):
+            if not self.healthy(nb):
+                out[nb] = True
+                continue
+            log = self.heartbeats.logs[nb]
+            if self.predictor is not None and log:
+                out[nb] = self.predictor.predict(log[-1])
+            else:
+                out[nb] = False
+        return out
+
+    def pick_target(self, failing: int) -> Optional[int]:
+        """Prefer a healthy spare; else a healthy adjacent host that is not
+        itself predicted to fail."""
+        for s in self.spares:
+            if self.healthy(s) and self.hosts[s].shard is None:
+                return s
+        preds = self.neighbour_predictions(failing)
+        for nb, doomed in preds.items():
+            if not doomed and self.healthy(nb):
+                return nb
+        for hid, h in self.hosts.items():
+            if hid != failing and self.healthy(hid):
+                return hid
+        return None
+
+    def occupy(self, hid: int, shard, owner: str):
+        h = self.hosts[hid]
+        h.shard = shard
+        h.owner = owner
+        h.is_spare = False
+        if hid in self.spares:
+            self.spares.remove(hid)
+
+    def release(self, hid: int):
+        h = self.hosts[hid]
+        h.shard = None
+        h.owner = None

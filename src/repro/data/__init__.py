@@ -1,0 +1,8 @@
+from repro.data.genome import (
+    GenomeSearchJob,
+    make_genome,
+    make_pattern_dictionary,
+    search_chunk,
+    reverse_complement,
+)
+from repro.data.synthetic import token_batches

@@ -1,0 +1,19 @@
+"""Deterministic synthetic token stream for training runs.
+
+Deterministic in (seed, step) — the FT trainer's losslessness invariant
+(bit-identical final state under failures) depends on the pipeline being
+replayable from any step."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def token_batches(seed: int, batch: int, seq: int, vocab: int):
+    """Returns make_batch(step) -> {'tokens': (batch, seq) int32}."""
+
+    def make_batch(step: int):
+        key = jax.random.fold_in(jax.random.key(seed), step)
+        return {"tokens": np.asarray(jax.random.randint(key, (batch, seq), 0, vocab))}
+
+    return make_batch

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are INDEPENDENT implementations (naive, token-by-token where
+applicable) — not re-exports of the model code — so a kernel bug and a
+model bug cannot cancel out. tests/test_kernels_*.py sweeps shapes and
+dtypes asserting allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,S,hd); k/v: (B,K,S,hd). Naive full-matrix attention."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    g = H // K
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s / np.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, wlog, u, state):
+    """Sequential token-by-token WKV6 recurrence (the definitional form).
+
+    r/k/v/wlog: (B,H,S,N); u: (H,N); state: (B,H,N,N).
+    y_t = S_t^T r_t + (r_t . (u*k_t)) v_t ;  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    """
+    B, H, S, N = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = jnp.exp(wlog.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S_state, t):
+        rt, kt, vt, wt = rf[:, :, t], kf[:, :, t], vf[:, :, t], wf[:, :, t]
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S_state)
+        y = y + jnp.sum(rt * (uf[None] * kt), -1, keepdims=True) * vt
+        S_new = S_state * wt[..., None] + kt[..., None] * vt[..., None, :]
+        return S_new, y
+
+    state_f, ys = jax.lax.scan(step, state.astype(jnp.float32), jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 2)  # (B,H,S,N)
+    return y.astype(r.dtype), state_f
+
+
+def rglru_ref(log_a, m, h0):
+    """Sequential per-channel linear recurrence h_t = exp(log_a_t) h_{t-1} + m_t."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    mf = m.astype(jnp.float32)
+
+    def step(h, t):
+        h = a[:, t] * h + mf[:, t]
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(log_a.shape[1]))
+    return jnp.moveaxis(hs, 0, 1), hT

@@ -1,0 +1,224 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract memory / cost / collective statistics for the roofline analysis.
+
+Run as:  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+             --shape train_4k --mesh multi --out experiments/dryrun/...json
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, applicable, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.roofline.analysis import V5E, model_flops, param_count, roofline_terms  # noqa: E402
+from repro.roofline.hlo import module_stats  # noqa: E402
+from repro.sharding.rules import MeshRules  # noqa: E402
+from repro.train.step import (  # noqa: E402
+    cache_shardings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.utils.tree import Param, split_params, tree_bytes  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Variants: named config/sharding tweaks used by the §Perf hillclimb.
+# "baseline" is the paper-faithful default configuration.
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    "baseline": {},
+    # hillclimb variants (see EXPERIMENTS.md §Perf)
+    "fsdp": {"fsdp": True},
+    "no_fsdp": {"fsdp": False},
+    "compress": {"grad_compression": True},
+    "sp_model": {"overrides": {"seq": ["model"]}},  # sequence/context parallel
+    "sp_flash": {"overrides": {"seq": ["model"]}, "flash_adjust": True},
+    "flash": {"flash_adjust": True},  # Pallas-kernel-adjusted memory term
+    "moe_manual": {"moe_impl": "manual"},  # shard_map expert parallelism
+    "moe_manual_flash": {"moe_impl": "manual", "flash_adjust": True},
+    "moe_manual_compress": {"moe_impl": "manual", "grad_compression": True},
+    "sp_moe_manual": {"overrides": {"seq": ["model"]}, "moe_impl": "manual"},
+    "sp_moe_manual_flash": {
+        "overrides": {"seq": ["model"]},
+        "moe_impl": "manual",
+        "flash_adjust": True,
+    },
+    "seq_shard": {"overrides": {"seq": ["__data__"]}},
+    "cache_seq_shard": {"overrides": {"seq": ["__data__"]}},
+    "kv_int8": {"kv_cache_dtype": "int8"},  # serving: halve the cache reads
+    # serving: bf16 weights + int8 cache (weight-read halving vs fp32)
+    "serve_bf16_kv8": {"kv_cache_dtype": "int8", "param_dtype": "bfloat16"},
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str = "baseline"):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "params_total": param_count(cfg)["total"],
+        "params_active": param_count(cfg)["active"],
+    }
+    if not ok:
+        result["skipped"] = why
+        return result
+
+    v = dict(VARIANTS[variant])
+    overrides = v.pop("overrides", {})
+    grad_compression = v.pop("grad_compression", False)
+    flash_adjust = v.pop("flash_adjust", False)
+    if v:
+        cfg = dataclasses.replace(cfg, **v)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    rules = MeshRules(mesh, fsdp=cfg.fsdp, overrides=overrides)
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            train_step, _init, abstract_state, state_shardings, batch_shardings = (
+                make_train_step(model, rules, grad_compression=grad_compression)
+            )
+            st_sh = state_shardings()
+            b_sh = batch_shardings(shape)
+            abs_state = abstract_state()
+            abs_batch, _ = split_params(model.input_specs(shape))
+            fn = jax.jit(
+                train_step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = fn.lower(abs_state, abs_batch)
+            result["state_bytes_global"] = tree_bytes(abs_state)
+        elif shape.kind == "prefill":
+            prefill_step = make_prefill_step(model, rules)
+            values, axes = split_params(model.abstract_init())
+            from repro.sharding.rules import shard_tree
+
+            p_sh = shard_tree(rules, axes, values)
+            abs_batch, baxes = split_params(model.input_specs(shape))
+            b_sh = shard_tree(rules, baxes, abs_batch)
+            fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(values, abs_batch)
+            result["state_bytes_global"] = tree_bytes(values)
+        else:  # decode
+            decode_step = make_decode_step(model, rules)
+            values, axes = split_params(model.abstract_init())
+            from repro.sharding.rules import shard_tree
+
+            p_sh = shard_tree(rules, axes, values)
+            c_sh, abs_cache = cache_shardings(model, rules, B, S)
+            abs_tok, tax = split_params(
+                {k: v for k, v in model.input_specs(shape).items()}
+            )
+            t_sh = shard_tree(rules, tax, abs_tok)
+            fn = jax.jit(
+                decode_step,
+                in_shardings=(p_sh, t_sh["tokens"], t_sh["pos"], c_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(3,),
+            )
+            lowered = fn.lower(
+                values, abs_tok["tokens"], abs_tok["pos"], abs_cache
+            )
+            result["state_bytes_global"] = tree_bytes(values) + tree_bytes(abs_cache)
+
+        result["lower_s"] = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        print(mem)
+        ca = compiled.cost_analysis()
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+        result["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        }
+        peak = (
+            result["memory"]["argument_bytes"]
+            + result["memory"]["output_bytes"]
+            + result["memory"]["temp_bytes"]
+            - result["memory"]["alias_bytes"]
+        )
+        result["memory"]["peak_per_device"] = peak
+        result["memory"]["fits_hbm"] = bool(peak <= V5E.hbm_bytes)
+
+        hlo = compiled.as_text()
+        stats = module_stats(hlo)
+        colls = stats["collectives"]
+        # cost_analysis counts while bodies once; the HLO walk applies loop
+        # trip counts -> use the weighted numbers for the roofline.
+        flops_dev = float(stats["flops"])
+        bytes_dev = float(stats["bytes"])
+        result["cost"] = {
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "cost_analysis_flops_body_once": float(ca.get("flops", 0.0)),
+            "cost_analysis_bytes_body_once": float(ca.get("bytes accessed", 0.0)),
+        }
+        result["collectives"] = {
+            k: v for k, v in colls.items() if v["count"] > 0 or k == "_total"
+        }
+        mf = model_flops(cfg, shape)
+        result["model_flops_global"] = mf
+        hlo_flops_global = flops_dev * chips
+        result["useful_compute_ratio"] = (
+            mf / hlo_flops_global if hlo_flops_global else 0.0
+        )
+        result["roofline"] = roofline_terms(
+            flops_dev, bytes_dev, colls["_total"]["wire_bytes"]
+        )
+        # Pallas-kernel-adjusted memory: named_scope-tagged intermediates
+        # (attention scores / wkv pairwise blocks) live in VMEM inside the
+        # fused kernels on TPU; report the roofline with them removed.
+        result["fusable_bytes_per_device"] = float(stats.get("fusable_bytes", 0.0))
+        if flash_adjust:
+            adj = max(bytes_dev - result["fusable_bytes_per_device"], 0.0)
+            result["roofline_flash_adjusted"] = roofline_terms(
+                flops_dev, adj, colls["_total"]["wire_bytes"]
+            )
+            result["roofline"] = result["roofline_flash_adjusted"]
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run_cell(args.arch, args.shape, args.mesh, args.variant)
+    js = json.dumps(res, indent=2, default=str)
+    print(js)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(js)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so these meshes can be built on the CPU-only container.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over real local devices (tests / examples)."""
+    return jax.make_mesh(
+        (n_data, n_model),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+    )

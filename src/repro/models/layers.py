@@ -1,0 +1,300 @@
+"""Shared layers: norms, rotary embeddings, GQA attention (full / sliding
+window / cross / decode-with-cache), and MLP variants (swiglu/geglu/gelu).
+
+All params are ``repro.utils.tree.Param`` (value + logical axes); apply
+functions take the *values* tree (plain arrays). Attention supports
+q-chunking (flash-style scan over query blocks) so 32k-token prefill never
+materialises an (S, S) score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import Param
+
+INIT_STD = 0.02
+NEG_INF = -2.0e38
+
+
+def _norm_init(key, dim, kind):
+    if kind == "layer":
+        return {
+            "scale": Param(jnp.ones((dim,), jnp.float32), ("embed",)),
+            "bias": Param(jnp.zeros((dim,), jnp.float32), ("embed",)),
+        }
+    return {"scale": Param(jnp.ones((dim,), jnp.float32), ("embed",))}
+
+
+def norm_apply(p, x, kind="rms", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, axes, std=INIT_STD, dtype=jnp.float32):
+    return Param(jax.random.normal(key, shape, dtype) * std, axes)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_apply(x, positions, theta: float):
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, cross: bool = False) -> Dict[str, Any]:
+    d, H, n, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[1], (d, n, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_init(ks[2], (d, n, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_init(ks[3], (H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = Param(jnp.zeros((H, hd), jnp.float32), ("heads", "head_dim"))
+        p["bk"] = Param(jnp.zeros((n, hd), jnp.float32), ("kv_heads", "head_dim"))
+        p["bv"] = Param(jnp.zeros((n, hd), jnp.float32), ("kv_heads", "head_dim"))
+    return p
+
+
+def _sdpa(q, k, v, qpos, kpos, kvalid, window, causal):
+    """q: (B,Sq,n,g,hd); k,v: (B,Skv,n,hd); positions int32.
+
+    Returns (B,Sq,n,g,hd). Mask: causal (kpos<=qpos), window, validity.
+
+    The named scope tags every score-tensor op in the HLO: on TPU the
+    Pallas flash kernel keeps this traffic in VMEM, and the roofline's
+    kernel-adjusted memory term subtracts the tagged bytes.
+    """
+    with jax.named_scope("attn_scores"):
+        hd = q.shape[-1]
+        scale = 1.0 / np.sqrt(hd)
+        scores = jnp.einsum(
+            "bsngk,btnk->bnsgt", q, k, preferred_element_type=jnp.float32
+        )
+        scores = scores * scale  # (B,n,Sq,g,Skv)
+        mask = kvalid[:, None, None, None, :]
+        if causal:
+            mask = mask & (kpos[:, None, None, None, :] <= qpos[:, None, :, None, None])
+        if window:
+            mask = mask & (
+                kpos[:, None, None, None, :] > qpos[:, None, :, None, None] - window
+            )
+        scores = jnp.where(mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bnsgt,btnk->bsngk", w, v)
+
+
+def attention_apply(
+    p,
+    x,
+    cfg,
+    *,
+    positions,  # (B, S) int32 query positions
+    causal: bool = True,
+    window: int = 0,
+    memory: Optional[jnp.ndarray] = None,  # cross-attention source (B,Sm,d)
+    cache: Optional[Dict[str, jnp.ndarray]] = None,  # decode KV cache
+    cache_pos: Optional[jnp.ndarray] = None,  # scalar int32 write position
+    use_rope: bool = True,
+    q_chunk: int = 0,
+    rules=None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    B, S, d = x.shape
+    H = p["wq"].shape[1]
+    n = p["wk"].shape[1]
+    hd = p["wq"].shape[2]
+    g = H // n
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    if memory is not None:  # cross attention: k/v from encoder memory
+        src = memory
+    else:
+        src = x
+    k = jnp.einsum("bsd,dnk->bsnk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnk->bsnk", src, p["wv"].astype(x.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+
+    if use_rope and memory is None:
+        q = rope_apply(q, positions, cfg.rope_theta)
+        if cache is None:
+            k = rope_apply(k, positions, cfg.rope_theta)
+        else:
+            k = rope_apply(k, positions, cfg.rope_theta)  # S==1 decode token
+
+    new_cache = None
+    if cache is not None:
+        # ring buffer of size W (W = full seq for dense, window for local)
+        W = cache["k"].shape[1]
+        slot = jnp.mod(cache_pos, W)
+        quantized = "k_scale" in cache
+        if quantized:
+            kq8, ks = _quantize_kv(k)
+            vq8, vs = _quantize_kv(v)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq8, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq8, (0, slot, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+            )
+        kp = jax.lax.dynamic_update_slice(
+            cache["kpos"], jnp.broadcast_to(cache_pos, (B, 1)).astype(jnp.int32), (0, slot)
+        )
+        new_cache = {"k": ck, "v": cv, "kpos": kp}
+        if quantized:
+            new_cache["k_scale"] = cks
+            new_cache["v_scale"] = cvs
+            k_eff = _dequantize_kv(ck, cks, x.dtype)
+            v_eff = _dequantize_kv(cv, cvs, x.dtype)
+        else:
+            k_eff = ck.astype(x.dtype)
+            v_eff = cv.astype(x.dtype)
+        kq = q.reshape(B, S, n, g, hd)
+        out = _sdpa(
+            kq,
+            k_eff,
+            v_eff,
+            qpos=positions,
+            kpos=kp,
+            kvalid=kp >= 0,
+            window=window,
+            causal=causal,
+        )
+    else:
+        Skv = src.shape[1]
+        kpos = (
+            positions
+            if memory is None
+            else jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+        )
+        kvalid = jnp.ones((B, Skv), bool)
+        # NOTE (§Perf iteration 4/5, refuted hypothesis): forcing kv seq
+        # replication ("gather the small GQA kv instead of ring attention")
+        # made XLA hoist the sequence all-gather above the projections and
+        # LOST net roofline on all three hillclimb cells (kimi 0.201->0.173);
+        # XLA's ring schedule trades collective for score-memory, and with
+        # the flash kernel the score-memory is VMEM-resident anyway. The
+        # constraint was removed — see EXPERIMENTS.md §Perf.
+        q5 = q.reshape(B, S, n, g, hd)
+        if q_chunk and S > q_chunk and S % q_chunk == 0:
+            nc = S // q_chunk
+
+            def body(carry, inp):
+                qc, qpc = inp  # (B, q_chunk, n, g, hd), (B, q_chunk)
+                o = _sdpa(qc, k, v, qpc, kpos, kvalid, window, causal)
+                return carry, o
+
+            qcs = q5.reshape(B, nc, q_chunk, n, g, hd).transpose(1, 0, 2, 3, 4, 5)
+            pcs = positions.reshape(B, nc, q_chunk).transpose(1, 0, 2)
+            _, outs = jax.lax.scan(jax.checkpoint(body), 0, (qcs, pcs))
+            out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, n, g, hd)
+        else:
+            out = _sdpa(q5, k, v, positions, kpos, kvalid, window, causal)
+
+    out = out.reshape(B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def attention_cache_init(cfg, batch: int, length: int, dtype) -> Dict[str, Param]:
+    n, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        # beyond-paper serving optimization: int8 KV cache with per-(token,
+        # head) scales — halves the decode memory-roofline term vs bf16
+        return {
+            "k": Param(jnp.zeros((batch, length, n, hd), jnp.int8),
+                       ("batch", "seq", "kv_heads", "head_dim")),
+            "v": Param(jnp.zeros((batch, length, n, hd), jnp.int8),
+                       ("batch", "seq", "kv_heads", "head_dim")),
+            "k_scale": Param(jnp.zeros((batch, length, n), jnp.float16),
+                             ("batch", "seq", "kv_heads")),
+            "v_scale": Param(jnp.zeros((batch, length, n), jnp.float16),
+                             ("batch", "seq", "kv_heads")),
+            "kpos": Param(jnp.full((batch, length), -1, jnp.int32), ("batch", "seq")),
+        }
+    return {
+        "k": Param(jnp.zeros((batch, length, n, hd), dtype), ("batch", "seq", "kv_heads", "head_dim")),
+        "v": Param(jnp.zeros((batch, length, n, hd), dtype), ("batch", "seq", "kv_heads", "head_dim")),
+        "kpos": Param(jnp.full((batch, length), -1, jnp.int32), ("batch", "seq")),
+    }
+
+
+def _quantize_kv(x):
+    """x: (B, S, n, hd) -> (int8 values, per-(token,head) fp16 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.float16)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wg": dense_init(ks[0], (d, f), ("embed", "mlp")),
+            "wu": dense_init(ks[1], (d, f), ("embed", "mlp")),
+            "wo": dense_init(ks[2], (f, d), ("mlp", "embed")),
+        }
+    # plain gelu (whisper)
+    return {
+        "wi": dense_init(ks[0], (d, f), ("embed", "mlp")),
+        "bi": Param(jnp.zeros((f,), jnp.float32), ("mlp",)),
+        "wo": dense_init(ks[1], (f, d), ("mlp", "embed")),
+        "bo": Param(jnp.zeros((d,), jnp.float32), ("embed",)),
+    }
+
+
+def mlp_apply(p, x, cfg):
+    if "wg" in p:
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(x @ p["wg"].astype(x.dtype)) * (x @ p["wu"].astype(x.dtype))
+        return h @ p["wo"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["wi"].astype(x.dtype) + p["bi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype) + p["bo"].astype(x.dtype)

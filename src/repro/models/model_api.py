@@ -1,0 +1,579 @@
+"""Composable model definition covering all assigned architecture families.
+
+A model is a list of *stacks*; each stack is (pattern unit, repeats) where a
+unit is a tuple of block kinds, e.g. (("attn",), 18) for gemma or
+(("rec","rec","attn_local"), 12) + (("rec","rec"), 1) for recurrentgemma.
+Per-stack params/caches are stacked along a leading "layers" dim and applied
+with jax.lax.scan (+ remat for training) so the HLO stays compact and
+compile stays fast at 512 devices.
+
+Block kinds:
+  attn        full causal attention + (dense|MoE) FFN
+  attn_local  sliding-window attention + FFN
+  rec         RG-LRU temporal block + FFN
+  rwkv        RWKV6 time-mix + channel-mix
+  enc         bidirectional encoder attention + FFN (whisper encoder)
+  xattn       causal self-attn + cross-attn to encoder memory + FFN
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as G
+from repro.models import rwkv6 as R
+from repro.sharding.rules import constrain
+from repro.utils.tree import Param, split_params
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+
+def _ffn_init(key, cfg):
+    if cfg.moe:
+        return M.moe_init(key, cfg)
+    return L.mlp_init(key, cfg)
+
+
+def _block_init(kind: str, key, cfg) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("attn", "attn_local", "enc"):
+        return {
+            "ln1": L._norm_init(k1, cfg.d_model, cfg.norm),
+            "attn": L.attention_init(k2, cfg),
+            "ln2": L._norm_init(k3, cfg.d_model, cfg.norm),
+            "ffn": _ffn_init(k4, cfg),
+        }
+    if kind == "xattn":
+        k5, k6 = jax.random.split(k4)
+        return {
+            "ln1": L._norm_init(k1, cfg.d_model, cfg.norm),
+            "attn": L.attention_init(k2, cfg),
+            "lnx": L._norm_init(k3, cfg.d_model, cfg.norm),
+            "xattn": L.attention_init(k5, cfg, cross=True),
+            "ln2": L._norm_init(k6, cfg.d_model, cfg.norm),
+            "ffn": L.mlp_init(k6, cfg),
+        }
+    if kind == "rec":
+        return {
+            "ln1": L._norm_init(k1, cfg.d_model, cfg.norm),
+            "rec": G.rglru_block_init(k2, cfg),
+            "ln2": L._norm_init(k3, cfg.d_model, cfg.norm),
+            "ffn": L.mlp_init(k4, cfg),
+        }
+    if kind == "rwkv":
+        return {
+            "ln1": L._norm_init(k1, cfg.d_model, cfg.norm),
+            "tm": R.timemix_init(k2, cfg),
+            "ln2": L._norm_init(k3, cfg.d_model, cfg.norm),
+            "cm": R.channelmix_init(k4, cfg),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Block caches (decode state), stacked over repeats R
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(kind: str, cfg, R_: int, B: int, seq_len: int, dtype):
+    def stack(p: Param) -> Param:
+        v = jnp.broadcast_to(p.value, (R_,) + p.value.shape)
+        return Param(v, ("layers",) + p.axes)
+
+    if kind in ("attn", "enc"):
+        c = {"attn": L.attention_cache_init(cfg, B, seq_len, dtype)}
+    elif kind == "attn_local":
+        W = min(cfg.window or seq_len, seq_len)
+        c = {"attn": L.attention_cache_init(cfg, B, W, dtype)}
+    elif kind == "xattn":
+        c = {"attn": L.attention_cache_init(cfg, B, seq_len, dtype)}
+    elif kind == "rec":
+        w = cfg.lru_width or cfg.d_model
+        c = {
+            "h": Param(jnp.zeros((B, w), jnp.float32), ("batch", "lru")),
+            "conv": Param(
+                jnp.zeros((B, cfg.conv_width - 1, w), dtype), ("batch", None, "lru")
+            ),
+        }
+    elif kind == "rwkv":
+        H, N = cfg.n_heads, cfg.resolved_head_dim
+        c = {
+            "wkv": Param(
+                jnp.zeros((B, H, N, N), jnp.float32),
+                ("batch", "heads", "head_dim", None),
+            ),
+            "shift_t": Param(jnp.zeros((B, cfg.d_model), dtype), ("batch", "embed")),
+            "shift_c": Param(jnp.zeros((B, cfg.d_model), dtype), ("batch", "embed")),
+        }
+    else:
+        raise ValueError(kind)
+    return jax.tree.map(stack, c, is_leaf=lambda x: isinstance(x, Param))
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+
+def _ffn_apply(p, x, cfg, rules):
+    if cfg.moe:
+        return M.moe_apply(p, x, cfg, rules)
+    return L.mlp_apply(p, x, cfg), jnp.float32(0.0)
+
+
+def _block_apply(kind: str, p, x, cfg, ctx, cache):
+    """Returns (x, new_cache, aux_loss)."""
+    rules = ctx["rules"]
+    aux = jnp.float32(0.0)
+    decode = ctx["decode"]
+    if not decode:
+        # pin the residual stream's layout at block entry (with the default
+        # rules this is a no-op; under the sequence-parallel overrides it
+        # keeps activations seq-sharded through the whole stack)
+        x = constrain(x, rules, ("batch", "seq", None))
+    if kind in ("attn", "attn_local", "enc", "xattn"):
+        window = cfg.window if kind == "attn_local" else 0
+        causal = kind != "enc"
+        h = L.norm_apply(p["ln1"], x, cfg.norm)
+        a, new_kv = L.attention_apply(
+            p["attn"],
+            h,
+            cfg,
+            positions=ctx["positions"],
+            causal=causal,
+            window=window,
+            cache=cache["attn"] if (cache is not None and decode) else None,
+            cache_pos=ctx.get("pos_scalar"),
+            use_rope=cfg.rope_theta > 0 and kind != "enc" and not ctx["learned_pos"],
+            q_chunk=ctx.get("q_chunk", 0),
+            rules=rules,
+        )
+        x = x + a
+        new_cache = None
+        if decode:
+            new_cache = dict(cache)
+            new_cache["attn"] = new_kv
+        elif ctx["prefill"]:
+            # build cache from the full-sequence k/v (ring layout: slot = pos % W)
+            new_cache = _kv_from_prefill(p["attn"], h, cfg, ctx, window)
+        if kind == "xattn":
+            hx = L.norm_apply(p["lnx"], x, cfg.norm)
+            a2, _ = L.attention_apply(
+                p["xattn"],
+                hx,
+                cfg,
+                positions=ctx["positions"],
+                causal=False,
+                memory=ctx["memory"],
+                use_rope=False,
+            )
+            x = x + a2
+        h = L.norm_apply(p["ln2"], x, cfg.norm)
+        f, aux = _ffn_apply(p["ffn"], h, cfg, rules)
+        x = x + f
+        return x, new_cache, aux
+    if kind == "rec":
+        h = L.norm_apply(p["ln1"], x, cfg.norm)
+        r, h_state, conv_state = G.rglru_block_apply(
+            p["rec"],
+            h,
+            cfg,
+            h_state=cache["h"] if cache is not None else None,
+            conv_state=cache["conv"] if cache is not None else None,
+            decode=decode,
+        )
+        x = x + r
+        new_cache = {"h": h_state, "conv": conv_state} if (decode or ctx["prefill"]) else None
+        h = L.norm_apply(p["ln2"], x, cfg.norm)
+        f, aux = _ffn_apply(p["ffn"], h, cfg, rules)
+        return x + f, new_cache, aux
+    if kind == "rwkv":
+        h = L.norm_apply(p["ln1"], x, cfg.norm)
+        t, shift_t, wkv = R.timemix_apply(
+            p["tm"],
+            h,
+            cfg,
+            shift_state=cache["shift_t"] if cache is not None else None,
+            wkv_state=cache["wkv"] if cache is not None else None,
+            decode=decode,
+        )
+        x = x + t
+        h = L.norm_apply(p["ln2"], x, cfg.norm)
+        c, shift_c = R.channelmix_apply(
+            p["cm"], h, shift_state=cache["shift_c"] if cache is not None else None
+        )
+        x = x + c
+        new_cache = (
+            {"wkv": wkv, "shift_t": shift_t, "shift_c": shift_c}
+            if (decode or ctx["prefill"])
+            else None
+        )
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+def _kv_from_prefill(p, h, cfg, ctx, window):
+    """Recompute k/v for the whole sequence and lay them out as a decode cache.
+
+    For windowed attention only the last W positions are kept; ring slot
+    correctness requires S % W == 0 (holds for the assigned shapes)."""
+    B, S, _ = h.shape
+    k = jnp.einsum("bsd,dnk->bsnk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dnk->bsnk", h, p["wv"].astype(h.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    if cfg.rope_theta > 0 and not ctx["learned_pos"]:
+        k = L.rope_apply(k, ctx["positions"], cfg.rope_theta)
+    kpos = ctx["positions"].astype(jnp.int32)
+    if window and S > window:
+        k, v, kpos = k[:, -window:], v[:, -window:], kpos[:, -window:]
+    cache_len = ctx.get("cache_len")
+    if cache_len and not window and cache_len > k.shape[1]:
+        pad = cache_len - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
+    if cfg.kv_cache_dtype == "int8":
+        kq8, ks = L._quantize_kv(k)
+        vq8, vs = L._quantize_kv(v)
+        return {"attn": {"k": kq8, "v": vq8, "k_scale": ks, "v_scale": vs,
+                         "kpos": kpos}}
+    return {"attn": {"k": k, "v": v, "kpos": kpos}}
+
+
+# ---------------------------------------------------------------------------
+# ModelDef
+# ---------------------------------------------------------------------------
+
+
+def _stacks_for(cfg: ArchConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    if cfg.attn_free:
+        return [(("rwkv",), cfg.n_layers)]
+    if cfg.block_pattern:
+        unit = tuple("attn_local" if b == "attn" else b for b in cfg.block_pattern)
+        reps = cfg.n_layers // len(unit)
+        rem = cfg.n_layers - reps * len(unit)
+        stacks = [(unit, reps)]
+        if rem:
+            stacks.append((unit[:rem], 1))
+        return stacks
+    if cfg.encoder_layers:  # whisper decoder
+        return [(("xattn",), cfg.n_layers)]
+    return [(("attn",), cfg.n_layers)]
+
+
+@dataclass
+class ModelDef:
+    cfg: ArchConfig
+    stacks: List[Tuple[Tuple[str, ...], int]]
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": L.dense_init(ks[0], (cfg.vocab, cfg.d_model), ("vocab", "embed"))
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(
+                ks[1], (cfg.d_model, cfg.vocab), ("embed", "vocab")
+            )
+        params["final_ln"] = L._norm_init(ks[2], cfg.d_model, cfg.norm)
+        if self._learned_pos():
+            params["pos_embed"] = L.dense_init(
+                ks[3], (32768, cfg.d_model), (None, "embed"), std=0.01
+            )
+        for si, (unit, reps) in enumerate(self.stacks):
+            params[f"stack{si}"] = _init_stack(ks[4 + si % 3], unit, self.cfg, reps)
+        if cfg.encoder_layers:
+            enc_cfg = dataclasses.replace(cfg, n_layers=cfg.encoder_layers)
+            params["enc_pos"] = L.dense_init(
+                ks[5], (cfg.encoder_seq, cfg.d_model), (None, "embed"), std=0.01
+            )
+            params["encoder"] = _init_stack(ks[6], ("enc",), enc_cfg, cfg.encoder_layers)
+            params["enc_ln"] = L._norm_init(ks[7], cfg.d_model, cfg.norm)
+        if cfg.param_dtype != "float32":
+            pd = jnp.dtype(cfg.param_dtype)
+            params = jax.tree.map(
+                lambda p: Param(
+                    p.value.astype(pd) if jnp.issubdtype(p.value.dtype, jnp.floating) else p.value,
+                    p.axes,
+                ),
+                params,
+                is_leaf=lambda x: isinstance(x, Param),
+            )
+        return params
+
+    def abstract_init(self) -> Dict[str, Any]:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    def _learned_pos(self) -> bool:
+        return self.cfg.encoder_layers > 0  # whisper uses learned positions
+
+    # -- forward ------------------------------------------------------------
+    def _embed_inputs(self, values, batch, ctx):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = values["embed"][tokens].astype(_dt(cfg))
+        if self._learned_pos():
+            x = x + values["pos_embed"][ctx["positions"]].astype(x.dtype)
+        if cfg.num_img_tokens and "image_embeds" in batch:
+            img = batch["image_embeds"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        return x
+
+    def _encode(self, values, batch, rules):
+        cfg = self.cfg
+        frames = batch["frames"].astype(_dt(cfg))  # (B, enc_seq, d) stub embeddings
+        x = frames + values["enc_pos"][None, : frames.shape[1]].astype(frames.dtype)
+        B, S, _ = x.shape
+        ctx = _ctx(
+            positions=jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)),
+            rules=rules,
+            learned_pos=True,
+        )
+        x, _, _ = _apply_stack(values["encoder"], ("enc",), x, cfg, ctx, None, train=False)
+        return L.norm_apply(values["enc_ln"], x, cfg.norm)
+
+    def _backbone(self, values, x, ctx, caches, train):
+        aux_total = jnp.float32(0.0)
+        new_caches = {}
+        for si, (unit, reps) in enumerate(self.stacks):
+            cache_s = caches.get(f"stack{si}") if caches else None
+            x, nc, aux = _apply_stack(
+                values[f"stack{si}"], unit, x, self.cfg, ctx, cache_s, train
+            )
+            if nc is not None:
+                new_caches[f"stack{si}"] = nc
+            aux_total = aux_total + aux
+        return x, new_caches, aux_total
+
+    def _logits_head(self, values):
+        if self.cfg.tie_embeddings:
+            return values["embed"].T
+        return values["lm_head"]
+
+    # -- public entry points --------------------------------------------------
+    def loss(self, values, batch, rules=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        ctx = _ctx(rules=rules, train=True, learned_pos=self._learned_pos(),
+                   q_chunk=256)
+        P_img = cfg.num_img_tokens if (cfg.num_img_tokens and "image_embeds" in batch) else 0
+        S_tot = S_text + P_img
+        ctx["positions"] = jnp.broadcast_to(jnp.arange(S_tot, dtype=jnp.int32), (B, S_tot))
+        if cfg.encoder_layers:
+            ctx["memory"] = self._encode(values, batch, rules)
+        x = self._embed_inputs(values, batch, ctx)
+        x = constrain(x, rules, ("batch", "seq", None))
+        x, _, aux = self._backbone(values, x, ctx, None, train=True)
+        x = L.norm_apply(values["final_ln"], x, cfg.norm)
+        # predict tokens[:, t+1] from position P_img + t; mask the final slot
+        h = x[:, P_img : P_img + S_text]
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones((B, S_text - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)],
+            axis=1,
+        )
+        ce = _chunked_ce(h, self._logits_head(values).astype(h.dtype), labels, mask, rules)
+        return ce + 0.01 * aux
+
+    def prefill(self, values, batch, rules=None, cache_len: Optional[int] = None):
+        """cache_len > S pads the KV cache with headroom so subsequent decode
+        steps append instead of wrapping the ring (exactness tests rely on
+        this; serving should size it to max generation length)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        ctx = _ctx(rules=rules, prefill=True, learned_pos=self._learned_pos(),
+                   q_chunk=1024, cache_len=cache_len)
+        P_img = cfg.num_img_tokens if (cfg.num_img_tokens and "image_embeds" in batch) else 0
+        S_tot = S_text + P_img
+        ctx["positions"] = jnp.broadcast_to(jnp.arange(S_tot, dtype=jnp.int32), (B, S_tot))
+        if cfg.encoder_layers:
+            ctx["memory"] = self._encode(values, batch, rules)
+        x = self._embed_inputs(values, batch, ctx)
+        x = constrain(x, rules, ("batch", "seq", None))
+        x, caches, _ = self._backbone(values, x, ctx, None, train=False)
+        x = L.norm_apply(values["final_ln"], x, cfg.norm)
+        logits = x[:, -1] @ self._logits_head(values).astype(x.dtype)
+        if cfg.encoder_layers:
+            caches["memory"] = ctx["memory"]
+        return logits, caches
+
+    def decode(self, values, tokens, pos, caches, rules=None):
+        """tokens: (B,1) int32; pos: scalar int32 (same position per row)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        ctx = _ctx(
+            rules=rules,
+            decode=True,
+            learned_pos=self._learned_pos(),
+            pos_scalar=pos,
+            positions=jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32),
+        )
+        if cfg.encoder_layers:
+            ctx["memory"] = caches["memory"]
+        x = values["embed"][tokens].astype(_dt(cfg))
+        if self._learned_pos():
+            x = x + values["pos_embed"][ctx["positions"]].astype(x.dtype)
+        x, new_caches, _ = self._backbone(values, x, ctx, caches, train=False)
+        x = L.norm_apply(values["final_ln"], x, cfg.norm)
+        logits = x[:, 0] @ self._logits_head(values).astype(x.dtype)
+        if cfg.encoder_layers:
+            new_caches["memory"] = caches["memory"]
+        return logits, new_caches
+
+    # -- caches / input specs -------------------------------------------------
+    def init_cache(self, B: int, seq_len: int):
+        cfg = self.cfg
+        dt = _dt(cfg)
+        caches = {}
+        for si, (unit, reps) in enumerate(self.stacks):
+            caches[f"stack{si}"] = tuple(
+                _block_cache(kind, cfg, reps, B, seq_len, dt) for kind in unit
+            )
+        if cfg.encoder_layers:
+            caches["memory"] = Param(
+                jnp.zeros((B, cfg.encoder_seq, cfg.d_model), dt),
+                ("batch", "frames", None),
+            )
+        return caches
+
+    def abstract_cache(self, B: int, seq_len: int):
+        return jax.eval_shape(lambda: self.init_cache(B, seq_len))
+
+    def input_specs(self, shape: ShapeCfg) -> Dict[str, Param]:
+        """ShapeDtypeStruct stand-ins (weak-type-correct, no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sds = lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)
+        if shape.kind == "decode":
+            specs = {
+                "tokens": Param(sds((B, 1), jnp.int32), ("batch", None)),
+                "pos": Param(sds((), jnp.int32), ()),
+            }
+            return specs
+        S_text = S - (cfg.num_img_tokens or 0)
+        specs = {"tokens": Param(sds((B, S_text), jnp.int32), ("batch", "seq"))}
+        if cfg.num_img_tokens:
+            specs["image_embeds"] = Param(
+                sds((B, cfg.num_img_tokens, cfg.d_model), _dt(cfg)),
+                ("batch", "img", None),
+            )
+        if cfg.encoder_layers:
+            specs["frames"] = Param(
+                sds((B, cfg.encoder_seq, cfg.d_model), _dt(cfg)),
+                ("batch", "frames", None),
+            )
+        return specs
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_stack(key, unit, cfg, reps):
+    def one(k):
+        ks = jax.random.split(k, len(unit))
+        return {f"b{i}": _block_init(kind, ks[i], cfg) for i, kind in enumerate(unit)}
+
+    stacked = jax.vmap(one)(jax.random.split(key, reps))
+    return jax.tree.map(
+        lambda p: Param(p.value, ("layers",) + p.axes),
+        stacked,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+def _apply_stack(stack_values, unit, x, cfg, ctx, caches, train):
+    """Scan over the repeats dim. caches: tuple(per-kind stacked cache) or None."""
+
+    def body(carry, xs):
+        h, aux = carry
+        params_r, cache_r = xs
+        new_caches = []
+        for i, kind in enumerate(unit):
+            c = cache_r[i] if cache_r is not None else None
+            h, nc, a = _block_apply(kind, params_r[f"b{i}"], h, cfg, ctx, c)
+            new_caches.append(nc)
+            aux = aux + a
+        ys = tuple(new_caches) if any(c is not None for c in new_caches) else None
+        return (h, aux), ys
+
+    if train and cfg.remat:
+        body = jax.checkpoint(body)
+
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (stack_values, caches)
+    )
+    return x, new_caches, aux
+
+
+def _ctx(**kw):
+    base = dict(
+        positions=None,
+        memory=None,
+        rules=None,
+        decode=False,
+        prefill=False,
+        train=False,
+        learned_pos=False,
+        pos_scalar=None,
+        q_chunk=0,
+    )
+    base.update(kw)
+    return base
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materialises (B,S,V) logits)
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ce(h, head, labels, mask, rules=None, chunk: int = 512):
+    B, T, d = h.shape
+    c = min(chunk, T)
+    while T % c:
+        c //= 2
+    nc = T // c
+
+    def piece(hc, lc, mc):
+        logits = hc @ head  # (B, c, V)
+        logits = constrain(logits, rules, ("batch", None, "vocab"))
+        logits = logits.astype(jnp.float32)
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lz - ll) * mc)
+
+    piece = jax.checkpoint(piece)
+
+    def bodyf(tot, i):
+        hc = jax.lax.dynamic_slice_in_dim(h, i * c, c, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, i * c, c, axis=1)
+        return tot + piece(hc, lc, mc), None
+
+    total, _ = jax.lax.scan(bodyf, jnp.float32(0.0), jnp.arange(nc))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def build_model(cfg: ArchConfig) -> ModelDef:
+    return ModelDef(cfg=cfg, stacks=_stacks_for(cfg))

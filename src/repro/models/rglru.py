@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block: norm -> [linear -> causal temporal conv1d(width 4) -> RG-LRU]
+             * [linear -> GeLU]  -> linear out.
+
+RG-LRU: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) with
+a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t)), c = 8.
+Training/prefill uses jax.lax.associative_scan (log-depth, numerically
+stable — no exp of positive sums); decode is the one-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.utils.tree import Param
+
+RGLRU_C = 8.0
+LAMBDA_INIT = -4.83  # softplus(-4.83) ~ 0.008 -> a ~ exp(-0.032) ~ 0.97
+
+
+def rglru_block_init(key, cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "wx": dense_init(ks[0], (d, w), ("embed", "lru")),
+        "wy": dense_init(ks[1], (d, w), ("embed", "lru")),
+        "conv_w": Param(jnp.zeros((cw, w), jnp.float32) + 1.0 / cw, ("conv", "lru")),
+        "conv_b": Param(jnp.zeros((w,), jnp.float32), ("lru",)),
+        "wa": dense_init(ks[2], (w, w), ("lru", "lru")),
+        "ba": Param(jnp.zeros((w,), jnp.float32), ("lru",)),
+        "wi": dense_init(ks[3], (w, w), ("lru", "lru")),
+        "bi": Param(jnp.zeros((w,), jnp.float32), ("lru",)),
+        "lam": Param(jnp.zeros((w,), jnp.float32) + LAMBDA_INIT, ("lru",)),
+        "wo": dense_init(ks[4], (w, d), ("lru", "embed")),
+    }
+
+
+def _causal_conv(u, w, b, conv_state=None):
+    """u: (B,S,w); temporal conv over S. conv_state: (B, cw-1, w) history."""
+    cw = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((u.shape[0], cw - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([conv_state, u], axis=1)  # (B, S+cw-1, w)
+    out = sum(
+        up[:, i : i + u.shape[1], :] * w[i].astype(u.dtype) for i in range(cw)
+    ) + b.astype(u.dtype)
+    return out, up[:, -(cw - 1) :, :]
+
+
+def rglru_scan(log_a, m, h0):
+    """h_t = exp(log_a_t) h_{t-1} + m_t via associative scan over axis 1.
+
+    log_a, m: (B, S, w); h0: (B, w). Mirrors kernels/rglru.py."""
+    a = jnp.exp(log_a)
+    # fold h0 into the first step
+    m = m.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(e1, e2):
+        a1, m1 = e1
+        a2, m2 = e2
+        return a1 * a2, m1 * a2 + m2
+
+    _, h = jax.lax.associative_scan(combine, (a, m), axis=1)
+    return h
+
+
+def rglru_block_apply(
+    p,
+    x,
+    cfg,
+    h_state: Optional[jnp.ndarray] = None,  # (B, w)
+    conv_state: Optional[jnp.ndarray] = None,  # (B, cw-1, w)
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, d = x.shape
+    w = p["wx"].shape[1]
+    if h_state is None:
+        h_state = jnp.zeros((B, w), jnp.float32)
+
+    u = x @ p["wx"].astype(x.dtype)
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(uf @ p["wi"] + p["bi"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r  # (B,S,w) <= 0
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    m = mult * (i * uf)
+
+    if decode:
+        h = jnp.exp(log_a[:, 0]) * h_state + m[:, 0]
+        hs = h[:, None, :]
+        h_state = h
+    else:
+        hs = rglru_scan(log_a, m, h_state)
+        h_state = hs[:, -1, :]
+
+    gate = jax.nn.gelu(x @ p["wy"].astype(x.dtype))
+    out = (hs.astype(x.dtype) * gate) @ p["wo"].astype(x.dtype)
+    return out, h_state, conv_state

@@ -1,0 +1,176 @@
+"""RWKV-6 (Finch) time-mix and channel-mix layers.
+
+The WKV6 recurrence has per-channel *data-dependent* decay (the Finch
+signature feature, kept faithfully via the decay LoRA). Training/prefill
+uses a chunked formulation: pairwise intra-chunk log-decay differences
+(always <= 0 in the exponent => numerically stable) plus an inter-chunk
+carried state — the TPU-native re-think of the per-token CUDA kernel
+(MXU matmuls inside a chunk instead of a serial token loop).
+
+Simplification noted in DESIGN.md: the ddlerp token-shift LoRAs for
+r/k/v/g are replaced by static per-channel lerp weights (RWKV-5 style);
+the decay LoRA (w0 + tanh(x A) B) is kept.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.utils.tree import Param
+
+DECAY_LORA = 64
+
+
+def timemix_init(key, cfg) -> Dict[str, Any]:
+    d, H, N = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 10)
+    zeros_d = lambda: jnp.zeros((d,), jnp.float32)
+    return {
+        "mu_r": Param(zeros_d() + 0.5, ("embed",)),
+        "mu_k": Param(zeros_d() + 0.5, ("embed",)),
+        "mu_v": Param(zeros_d() + 0.5, ("embed",)),
+        "mu_g": Param(zeros_d() + 0.5, ("embed",)),
+        "mu_w": Param(zeros_d() + 0.5, ("embed",)),
+        "w0": Param(zeros_d() - 6.0, ("embed",)),  # exp(-exp(-6)) ~ 0.9975
+        "wA": dense_init(ks[0], (d, DECAY_LORA), ("embed", None), std=0.01),
+        "wB": dense_init(ks[1], (DECAY_LORA, d), (None, "embed"), std=0.01),
+        "u": Param(jnp.zeros((H, N), jnp.float32), ("heads", "head_dim")),
+        "wr": dense_init(ks[2], (d, H, N), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[3], (d, H, N), ("embed", "heads", "head_dim")),
+        "wv": dense_init(ks[4], (d, H, N), ("embed", "heads", "head_dim")),
+        "wg": dense_init(ks[5], (d, H, N), ("embed", "heads", "head_dim")),
+        "ln_scale": Param(jnp.ones((d,), jnp.float32), ("embed",)),
+        "ln_bias": Param(jnp.zeros((d,), jnp.float32), ("embed",)),
+        "wo": dense_init(ks[6], (d, d), ("embed", "embed")),
+    }
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def wkv6_chunked(r, k, v, wlog, u, state, chunk: int = 64):
+    """Chunked WKV6. r/k/v/wlog: (B, S, H, N) with wlog = log decay <= 0.
+    state: (B, H, N, N) carried k->v map. Returns (y (B,S,H,N), new state).
+
+    Mirrors kernels/rwkv6.py; this is the XLA (and oracle) path.
+    """
+    B, S, H, N = r.shape
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+    rc = r.reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    wc = wlog.reshape(B, nc, L, H, N).transpose(1, 0, 2, 3, 4)
+    mask = jnp.tril(jnp.ones((L, L), bool), -1)
+
+    def body(S_state, inp):
+        rb, kb, vb, wb = [t.astype(jnp.float32) for t in inp]
+        ld = jnp.cumsum(wb, axis=1)  # (B,L,H,N) inclusive cumulative log decay
+        ldm1 = jnp.concatenate([jnp.zeros_like(ld[:, :1]), ld[:, :-1]], axis=1)
+        with jax.named_scope("wkv_intra"):
+            # pairwise decay t<-s: exp(ld[t-1] - ld[s]), s < t (exponent <= 0).
+            # Mask BEFORE exp: the s >= t entries are positive and overflow.
+            # Tagged: the Pallas wkv6 kernel keeps this block in VMEM.
+            pair = ldm1[:, :, None] - ld[:, None, :]  # (B, Lt, Ls, H, N)
+            A = jnp.exp(jnp.where(mask[None, :, :, None, None], pair, -jnp.inf))
+            W = jnp.einsum("bthn,bshn,btshn->btsh", rb, kb, A)
+            y = jnp.einsum("btsh,bshn->bthn", W, vb)
+        # diagonal (current token) bonus term
+        du = jnp.einsum("bthn,bthn,hn->bth", rb, kb, u.astype(jnp.float32))
+        y = y + du[..., None] * vb
+        # cross-chunk contribution from carried state
+        y = y + jnp.einsum("bthn,bhnm->bthm", rb * jnp.exp(ldm1), S_state)
+        # state update (exponents ld[-1] - ld[s] <= 0: stable)
+        kscale = kb * jnp.exp(ld[:, -1:] - ld)
+        S_new = S_state * jnp.exp(ld[:, -1])[..., None] + jnp.einsum(
+            "bshn,bshm->bhnm", kscale, vb
+        )
+        return S_new, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    return y.astype(r.dtype), state
+
+
+def wkv6_step(r, k, v, wlog, u, state):
+    """Single-token decode. r/k/v/wlog: (B,H,N); state: (B,H,N,N)."""
+    rf, kf, vf, wf = [t.astype(jnp.float32) for t in (r, k, v, wlog)]
+    uk = u.astype(jnp.float32)[None] * kf  # (B,H,N)
+    y = jnp.einsum("bhn,bhnm->bhm", rf, state) + jnp.sum(rf * uk, -1, keepdims=True) * vf
+    state = state * jnp.exp(wf)[..., None] + kf[..., None] * vf[..., None, :]
+    return y.astype(r.dtype), state
+
+
+def timemix_apply(
+    p,
+    x,
+    cfg,
+    shift_state: Optional[jnp.ndarray] = None,  # (B, d) last token of prev step
+    wkv_state: Optional[jnp.ndarray] = None,  # (B, H, N, N)
+    decode: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, d = x.shape
+    H, N = cfg.n_heads, cfg.resolved_head_dim
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, N, N), jnp.float32)
+    xprev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+
+    def proj(w, xm):
+        return jnp.einsum("bsd,dhn->bshn", xm, w.astype(x.dtype))
+
+    xr, xk = _lerp(x, xprev, p["mu_r"]), _lerp(x, xprev, p["mu_k"])
+    xv, xg = _lerp(x, xprev, p["mu_v"]), _lerp(x, xprev, p["mu_g"])
+    xw = _lerp(x, xprev, p["mu_w"])
+    r, k, v = proj(p["wr"], xr), proj(p["wk"], xk), proj(p["wv"], xv)
+    g = jax.nn.silu(proj(p["wg"], xg))
+    lora = jnp.tanh(xw @ p["wA"].astype(x.dtype)) @ p["wB"].astype(x.dtype)
+    wlog = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    wlog = wlog.reshape(B, S, H, N)
+
+    if decode:
+        y, wkv_state = wkv6_step(
+            r[:, 0], k[:, 0], v[:, 0], wlog[:, 0], p["u"], wkv_state
+        )
+        y = y[:, None]
+    else:
+        y, wkv_state = wkv6_chunked(r, k, v, wlog, p["u"], wkv_state)
+
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, -1, keepdims=True)
+    var = jnp.mean((yf - mu) ** 2, -1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, -1, d)
+    yn = yn * p["ln_scale"] + p["ln_bias"]
+    out = (yn.astype(x.dtype) * g.reshape(B, -1, d)) @ p["wo"].astype(x.dtype)
+    return out, x[:, -1, :], wkv_state
+
+
+def channelmix_init(key, cfg) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": Param(jnp.zeros((d,), jnp.float32) + 0.5, ("embed",)),
+        "mu_r": Param(jnp.zeros((d,), jnp.float32) + 0.5, ("embed",)),
+        "wk": dense_init(ks[0], (d, f), ("embed", "mlp")),
+        "wv": dense_init(ks[1], (f, d), ("mlp", "embed")),
+        "wr": dense_init(ks[2], (d, d), ("embed", "embed")),
+    }
+
+
+def channelmix_apply(p, x, shift_state=None):
+    B, S, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    xprev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    xk, xr = _lerp(x, xprev, p["mu_k"]), _lerp(x, xprev, p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype))
+    return r * (k @ p["wv"].astype(x.dtype)), x[:, -1, :]

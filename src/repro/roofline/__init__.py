@@ -1,0 +1,2 @@
+from repro.roofline.hlo import collective_stats
+from repro.roofline.analysis import roofline_terms, HW

@@ -1,0 +1,111 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_wire_bytes_per_device / link_bw
+
+cost_analysis() on the SPMD-partitioned module reports per-device flops /
+bytes (verified against hand-computed shard flops), so dividing by a single
+chip's peaks gives the same number as the spec's global / (chips x peak)
+form. MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) is computed from
+the config for the useful-compute ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig, ShapeCfg
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-class chip."""
+
+    peak_flops: float = 197e12  # bf16 FLOP/s
+    hbm_bw: float = 819e9  # B/s
+    link_bw: float = 50e9  # B/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+V5E = HW()
+
+
+def param_count(cfg: ArchConfig) -> Dict[str, float]:
+    """Analytic parameter counts: total and active-per-token."""
+    d, f, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    attn = d * hd * (H + 2 * K) + H * hd * d
+
+    if cfg.attn_free:  # rwkv6
+        tm = 4 * d * H * hd + d * d + 2 * d * 64  # r/k/v/g + out + decay lora
+        cm = d * f + f * d + d * d
+        block_total = block_active = tm + cm
+        per_layer = [block_total] * L
+        active_per_layer = per_layer
+    elif cfg.block_pattern:
+        w = cfg.lru_width or d
+        rec = 2 * d * w + 2 * w * w + w * d + cfg.conv_width * w
+        mlp = 3 * d * f
+        per_layer, active_per_layer = [], []
+        pat = cfg.block_pattern
+        for i in range(L):
+            kind = pat[i % len(pat)]
+            p = (rec if kind == "rec" else attn) + mlp
+            per_layer.append(p)
+            active_per_layer.append(p)
+    elif cfg.moe:
+        shared = 3 * d * f * cfg.n_shared_experts
+        router = d * cfg.n_experts
+        experts_total = cfg.n_experts * 3 * d * f
+        experts_active = cfg.top_k * 3 * d * f
+        per_layer = [attn + router + shared + experts_total] * L
+        active_per_layer = [attn + router + shared + experts_active] * L
+    else:
+        mlp = 3 * d * f if cfg.mlp in ("swiglu", "geglu") else 2 * d * f
+        per_layer = [attn + mlp] * L
+        active_per_layer = per_layer
+
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    enc = 0
+    if cfg.encoder_layers:
+        enc = cfg.encoder_layers * (attn + 2 * d * f)
+    total = sum(per_layer) + emb + enc
+    active = sum(active_per_layer) + emb + enc
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeCfg) -> float:
+    """6*N*D with N = active params (MoE) and D = processed tokens."""
+    n = param_count(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    # decode: one token per row
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    coll_wire_bytes_per_dev: float,
+    hw: HW = V5E,
+) -> Dict[str, float]:
+    ct = flops_per_dev / hw.peak_flops
+    mt = bytes_per_dev / hw.hbm_bw
+    xt = coll_wire_bytes_per_dev / hw.link_bw
+    dom = max(("compute", ct), ("memory", mt), ("collective", xt), key=lambda p: p[1])
+    step = max(ct, mt, xt)
+    return {
+        "compute_s": ct,
+        "memory_s": mt,
+        "collective_s": xt,
+        "bottleneck": dom[0],
+        "step_lower_bound_s": step,
+        # fraction of the bound step that is pure compute = roofline fraction
+        "roofline_fraction": (ct / step) if step > 0 else 0.0,
+    }

@@ -1,0 +1,396 @@
+"""Trip-count-weighted roofline statistics from compiled SPMD HLO text.
+
+``cost_analysis()`` on the CPU backend visits while-loop bodies ONCE, but a
+layer-stack ``lax.scan`` executes its body L times — so both FLOPs and
+bytes would be undercounted by ~L x. This module re-derives the roofline
+inputs by walking the HLO call graph from ENTRY with while trip counts
+(extracted from each loop condition's `compare(ind, constant(N))`):
+
+  * FLOPs: 2 * numel(result) * contraction_size for every `dot`
+    (descends into fusion computations so fused dots are counted once).
+    Elementwise/transcendental flops are ignored (<1% for these models).
+  * bytes: per top-level instruction, operands + result (post-fusion HLO =
+    fusion boundaries are the HBM traffic boundaries), with special cases
+    for dynamic-(update-)slice / gather / scatter / broadcast which touch
+    only slice-sized data, and while/tuple plumbing skipped.
+  * collectives: operand bytes per all-gather / all-reduce / reduce-scatter
+    / all-to-all / collective-permute, with ring wire multipliers
+    (all-reduce = 2x). Shapes are per-device (partitioned), so totals are
+    per-chip; the roofline divides by per-link bandwidth directly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+MULTIPLIER = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,  # = reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "while", "conditional", "call", "partition-id", "replica-id",
+}
+_RESULT_ONLY = {"broadcast", "iota", "rng", "rng-bit-generator"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = int(np.prod([int(d) for d in dims.split(",")])) if dims else 1
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+class _Comp:
+    __slots__ = ("name", "lines", "is_entry")
+
+    def __init__(self, name):
+        self.name = name
+        self.lines: List[str] = []
+        self.is_entry = False
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, "_Comp"], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for ln in text.splitlines():
+        s = ln.strip()
+        if cur is None:
+            if s.endswith("{"):
+                m = _COMP_HDR.match(s)
+                if m:
+                    cur = _Comp(m.group(2))
+                    if m.group(1):
+                        cur.is_entry = True
+                        entry = cur.name
+        else:
+            if s == "}":
+                comps[cur.name] = cur
+                cur = None
+            else:
+                cur.lines.append(ln)
+    return comps, entry
+
+
+def _paren_args(ln: str) -> str:
+    i = ln.index("(")
+    depth, buf = 1, []
+    for ch in ln[i + 1 :]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    return "".join(buf)
+
+
+def _operand_names(ln: str) -> List[str]:
+    return re.findall(r"%([\w.\-]+)", _paren_args(ln))
+
+
+def _const_value(comp: _Comp, name: str) -> Optional[int]:
+    pat = re.compile(rf"%?{re.escape(name)}\s*=\s*\S+\s+constant\((\d+)\)")
+    for ln in comp.lines:
+        m = pat.search(ln)
+        if m:
+            return int(m.group(1))
+    return None
+
+
+def _trip_count(cond: _Comp, comps: Dict[str, "_Comp"]) -> int:
+    """Trip count from the loop condition. Handles both a bare
+    `compare(ind, constant(N))` and the fused form where the compare sits in
+    a called fusion whose constant operand is defined in the cond region.
+    Heuristic: max constant referenced from a compare-ish line."""
+
+    def comp_has_compare(name: str) -> bool:
+        c = comps.get(name)
+        return bool(c) and any(" compare(" in ln for ln in c.lines)
+
+    best = 0
+    for ln in cond.lines:
+        interesting = "compare" in ln
+        if not interesting:
+            cm = re.search(r"calls=%?([\w.\-]+)", ln)
+            interesting = bool(cm and comp_has_compare(cm.group(1)))
+        if not interesting:
+            continue
+        start = ln.index("(") if "(" in ln else 0
+        for a in re.findall(r"%([\w.\-]+)", ln[start:]):
+            v = _const_value(cond, a)
+            if v is not None:
+                best = max(best, v)
+    return best if best > 0 else 1
+
+
+def module_stats(hlo_text: str, top_n: int = 0) -> Dict:
+    comps, entry = _parse_computations(hlo_text)
+    top_acc: Dict[str, float] = {}
+    fusable = {"bytes": 0.0}  # rank>=5 intermediates (attention scores /
+    # wkv pairwise blocks) that the Pallas kernels keep in VMEM on TPU
+
+    symbols: Dict[str, Tuple[int, Optional[List[int]]]] = {}
+    for comp in comps.values():
+        for ln in comp.lines:
+            m = _INSTR.match(ln)
+            if m:
+                symbols[m.group(1)] = (_type_bytes(m.group(2)), _first_shape(m.group(2)))
+
+    coll = {c: {"count": 0.0, "operand_bytes": 0.0, "wire_bytes": 0.0} for c in COLLECTIVES}
+    acc = {"flops": 0.0, "bytes": 0.0}
+
+    def op_bytes(name: str) -> int:
+        return symbols.get(name, (0, None))[0]
+
+    def dot_flops(ln: str, type_str: str) -> float:
+        res_shape = _first_shape(type_str) or []
+        numel = float(np.prod(res_shape)) if res_shape else 1.0
+        ops = _operand_names(ln)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+        cdims = [int(d) for d in m.group(1).split(",")] if (m and m.group(1)) else []
+        csize = 1.0
+        if ops:
+            lhs_shape = symbols.get(ops[0], (0, None))[1] or []
+            for d in cdims:
+                if d < len(lhs_shape):
+                    csize *= lhs_shape[d]
+        return 2.0 * numel * csize
+
+    def visit_fusion_flops(comp_name: str, weight: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for ln in comp.lines:
+            m = _INSTR.match(ln)
+            if not m:
+                continue
+            _, type_str, op = m.groups()
+            if op == "dot":
+                acc["flops"] += weight * dot_flops(ln, type_str)
+            elif op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", ln)
+                if cm:
+                    visit_fusion_flops(cm.group(1), weight)
+
+    def fusion_bytes(comp_name: str, call_operands: List[str], result_bytes: int) -> float:
+        """HBM traffic of one fusion call: parameters consumed only via
+        dynamic-slice/gather read slice-sized data (critical for stacked
+        layer-scan buffers that are sliced per iteration); a ROOT
+        dynamic-update-slice writes update-sized data."""
+        comp = comps.get(comp_name)
+        if comp is None:
+            return float(sum(op_bytes(n) for n in call_operands) + result_bytes)
+        # parameter name -> call operand size
+        param_size: Dict[str, int] = {}
+        for ln in comp.lines:
+            m = _INSTR.match(ln)
+            if m and m.group(3) == "parameter":
+                idx_m = re.search(r"parameter\((\d+)\)", ln)
+                if idx_m:
+                    k = int(idx_m.group(1))
+                    if k < len(call_operands):
+                        param_size[m.group(1)] = op_bytes(call_operands[k])
+        sliced_reads: Dict[str, int] = {}
+        full_read: Dict[str, bool] = {p: False for p in param_size}
+        root_write = None
+        for ln in comp.lines:
+            m = _INSTR.match(ln)
+            if not m:
+                continue
+            name, type_str, op = m.groups()
+            if op == "parameter":
+                continue
+            ops_ = _operand_names(ln)
+            for pos, onm in enumerate(ops_):
+                if onm not in param_size:
+                    continue
+                if op in ("dynamic-slice", "gather") and pos == 0:
+                    sliced_reads[onm] = sliced_reads.get(onm, 0) + _type_bytes(type_str)
+                elif op == "dynamic-update-slice" and pos == 0:
+                    pass  # destination buffer: written via root, not fully read
+                else:
+                    full_read[onm] = True
+            if "ROOT" in ln and op == "dynamic-update-slice":
+                upd = op_bytes(ops_[1]) if len(ops_) > 1 else 0
+                # update operand may be fusion-internal; fall back to its def
+                if upd == 0 and len(ops_) > 1:
+                    upd = symbols.get(ops_[1], (0, None))[0]
+                root_write = 2 * upd  # read+write the updated slice region
+        reads = 0
+        for p, sz in param_size.items():
+            if full_read[p]:
+                reads += sz
+            elif p in sliced_reads:
+                reads += sliced_reads[p]
+            # params never referenced: 0
+        write = root_write if root_write is not None else result_bytes
+        return float(reads + write)
+
+    def note(op, type_str, b, ln=""):
+        # ops inside jax.named_scope("attn_scores"/"wkv_intra") carry the
+        # scope in their metadata op_name: these are exactly the
+        # intermediates the Pallas kernels keep in VMEM on TPU
+        if "attn_scores" in ln or "wkv_intra" in ln:
+            fusable["bytes"] += b
+        if top_n:
+            key = f"{op} {type_str[:60]}"
+            top_acc[key] = top_acc.get(key, 0.0) + b
+
+    def visit(comp_name: str, weight: float, depth: int = 0):
+        comp = comps.get(comp_name)
+        if comp is None or depth > 32:
+            return
+        for ln in comp.lines:
+            m = _INSTR.match(ln)
+            if not m:
+                continue
+            name, type_str, op = m.groups()
+            base = op
+            for suf in ("-start", "-done"):
+                if base.endswith(suf):
+                    base = base[: -len(suf)]
+
+            if base in COLLECTIVES:
+                if not op.endswith("-done"):
+                    ob = sum(op_bytes(n) for n in _operand_names(ln)) or _type_bytes(type_str)
+                    coll[base]["count"] += weight
+                    coll[base]["operand_bytes"] += ob * weight
+                    coll[base]["wire_bytes"] += ob * weight * MULTIPLIER[base]
+                    b = weight * (ob + _type_bytes(type_str))
+                    acc["bytes"] += b
+                    note(base, type_str, b, ln)
+                continue
+
+            if op == "while":
+                cond_m = re.search(r"condition=%?([\w.\-]+)", ln)
+                body_m = re.search(r"body=%?([\w.\-]+)", ln)
+                trips = 1
+                if cond_m and cond_m.group(1) in comps:
+                    trips = max(1, _trip_count(comps[cond_m.group(1)], comps))
+                if body_m:
+                    visit(body_m.group(1), weight * trips, depth + 1)
+                continue
+            if op == "conditional":
+                for cm in re.finditer(
+                    r"(?:true_computation|false_computation)=%?([\w.\-]+)", ln
+                ):
+                    visit(cm.group(1), weight, depth + 1)
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ln)
+                if bm:
+                    for nm in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        visit(nm, weight, depth + 1)
+                continue
+            if op == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", ln)
+                if cm:
+                    visit(cm.group(1), weight, depth + 1)
+                continue
+
+            if op == "dot":
+                acc["flops"] += weight * dot_flops(ln, type_str)
+            elif op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", ln)
+                if cm:
+                    visit_fusion_flops(cm.group(1), weight)
+                    b = weight * fusion_bytes(
+                        cm.group(1), _operand_names(ln), _type_bytes(type_str)
+                    )
+                    acc["bytes"] += b
+                    note("fusion", type_str, b, ln)
+                continue
+
+            # ---- HBM bytes ----
+            if op in _SKIP_BYTES:
+                continue
+            if op in _RESULT_ONLY:
+                b = weight * _type_bytes(type_str)
+                acc["bytes"] += b
+                note(op, type_str, b, ln)
+            elif op == "dynamic-update-slice":
+                ops_ = _operand_names(ln)
+                upd = op_bytes(ops_[1]) if len(ops_) > 1 else 0
+                b = weight * 2 * upd
+                acc["bytes"] += b
+                note(op, type_str, b, ln)
+            elif op == "dynamic-slice":
+                b = weight * 2 * _type_bytes(type_str)
+                acc["bytes"] += b
+                note(op, type_str, b, ln)
+            elif op == "gather":
+                b = weight * 2 * _type_bytes(type_str)
+                acc["bytes"] += b
+                note(op, type_str, b, ln)
+            elif op == "scatter":
+                ops_ = _operand_names(ln)
+                upd = op_bytes(ops_[2]) if len(ops_) > 2 else _type_bytes(type_str)
+                b = weight * 2 * upd
+                acc["bytes"] += b
+                note(op, type_str, b, ln)
+            else:
+                ob = sum(op_bytes(n) for n in _operand_names(ln))
+                b = weight * (ob + _type_bytes(type_str))
+                acc["bytes"] += b
+                note(op, type_str, b, ln)
+
+    if entry:
+        visit(entry, 1.0)
+
+    coll["_total"] = {
+        "count": sum(s["count"] for s in coll.values()),
+        "operand_bytes": sum(s["operand_bytes"] for s in coll.values()),
+        "wire_bytes": sum(s["wire_bytes"] for s in coll.values()),
+    }
+    out = {
+        "collectives": coll,
+        "flops": acc["flops"],
+        "bytes": acc["bytes"],
+        "fusable_bytes": fusable["bytes"],
+    }
+    if top_n:
+        out["top_ops"] = sorted(top_acc.items(), key=lambda kv: -kv[1])[:top_n]
+    return out
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return module_stats(hlo_text)["collectives"]

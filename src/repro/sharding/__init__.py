@@ -1,0 +1,6 @@
+from repro.sharding.rules import (
+    MeshRules,
+    logical_to_spec,
+    shard_tree,
+    constrain,
+)

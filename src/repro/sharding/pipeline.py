@@ -1,0 +1,104 @@
+"""GPipe-style pipeline parallelism via shard_map + ppermute.
+
+Layers are split into `n_stages` contiguous stages along the mesh's
+"model" axis (each rank holds only its stage's layer slice); the global
+batch is split into microbatches that flow through the pipeline with a
+collective-permute shift per tick. Tick count = n_micro + n_stages - 1
+(fill + drain bubbles); per-stage work is a lax.scan over that schedule,
+so the HLO stays one program regardless of depth.
+
+This is the PP building block for the parallelism matrix (DP/FSDP/TP/EP/
+SP are in rules.py / moe.py); `pipeline_apply` is numerically identical
+to applying the layers sequentially (tests/test_pipeline.py) and compiles
+on the 512-device production mesh (dryrun variant "pp" uses it for the
+layer stack).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(
+    layer_fn: Callable,  # (layer_params, x) -> x
+    stacked_params,  # pytree, leaves (L, ...)
+    x,  # (B, ...) with B % n_micro == 0
+    mesh: Mesh,
+    n_micro: int,
+    axis: str = "model",
+):
+    """Run L = n_stages * layers_per_stage layers as a GPipe pipeline over
+    mesh axis `axis`. Returns layer_fn applied L times to x."""
+    n_stages = mesh.shape[axis]
+    L = jax.tree.leaves(stacked_params)[0].shape[0]
+    assert L % n_stages == 0, (L, n_stages)
+    lps = L // n_stages
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    B_loc = x.shape[0] // n_data  # per-data-shard batch inside shard_map
+    assert B_loc % n_micro == 0, (x.shape[0], n_data, n_micro)
+    mb = B_loc // n_micro
+
+    # stage-shard the layer dim; microbatch the batch dim
+    p_specs = jax.tree.map(lambda _: P(axis), stacked_params)
+    x_spec = P(data_axes) if data_axes else P()
+
+    def stage_fn(params_stage, x_all):
+        """params_stage: (lps, ...) this rank's layers; x_all: (B, ...)."""
+        sid = jax.lax.axis_index(axis)
+        micro = x_all.reshape((n_micro, mb) + x_all.shape[1:])
+        n_ticks = n_micro + n_stages - 1
+        out = jnp.zeros_like(micro)
+
+        def apply_stage(h):
+            def body(hh, pl_):
+                return layer_fn(pl_, hh), None
+
+            hh, _ = jax.lax.scan(body, h, params_stage)
+            return hh
+
+        def tick(carry, t):
+            buf, out = carry  # buf: (mb, ...) activation entering this stage
+            # stage s processes microbatch m = t - s when 0 <= m < n_micro
+            m = t - sid
+            active = (m >= 0) & (m < n_micro)
+            inject = jax.lax.dynamic_index_in_dim(
+                micro, jnp.clip(t, 0, n_micro - 1), keepdims=False
+            )
+            h_in = jnp.where(sid == 0, inject, buf)
+            h_out = apply_stage(h_in)
+            h_out = jnp.where(active, h_out, buf)
+            # last stage writes its finished microbatch to the output slot
+            write_m = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            done = (sid == n_stages - 1) & (m >= 0) & (m < n_micro)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out,
+                jnp.where(done, h_out, jax.lax.dynamic_index_in_dim(out, write_m, keepdims=False)),
+                write_m,
+                axis=0,
+            )
+            # shift activations to the next stage
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(h_out, axis, perm)
+            return (buf, out), None
+
+        buf0 = jnp.zeros((mb,) + x_all.shape[1:], x_all.dtype)
+        (buf, out), _ = jax.lax.scan(tick, (buf0, out), jnp.arange(n_ticks))
+        # every rank now holds `out`, but only the last stage's is real;
+        # broadcast it: zero the others and psum
+        is_last = (sid == n_stages - 1).astype(out.dtype)
+        out = jax.lax.psum(out * is_last, axis)
+        return out.reshape(x_all.shape)
+
+    return jax.shard_map(
+        stage_fn,
+        mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=x_spec,
+        check_vma=False,
+    )(stacked_params, x)

@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+Every parameter leaf carries a tuple of *logical* axis names (see
+``repro.utils.tree.Param``). ``MeshRules`` maps logical names to mesh axes
+with divisibility checks: a mesh axis is only assigned if the dim size is
+divisible by the mesh-axis extent and the axis is not already used by
+another dim of the same leaf (a PartitionSpec constraint). This lets one
+rule table serve archs with e.g. 8 query heads on a 16-way model axis
+(the head_dim picks up the model axis instead).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[str, Tuple[str, ...], None]
+
+
+# Default logical -> candidate mesh axes. Each entry is a priority list;
+# the first candidate that (a) divides the dim and (b) uses only unused
+# mesh axes wins. "__data__" expands to all data-parallel axes present in
+# the mesh (("pod","data") or ("data",)).
+DEFAULT_RULES: Dict[str, Sequence[Axes]] = {
+    "batch": ["__data__"],
+    "seq": [None],
+    # kv tensors keep their sequence dim replicated even under the
+    # sequence-parallel overrides: gathering the (small, GQA) kv heads is
+    # far cheaper than the ring-attention XLA otherwise emits (measured
+    # 1.4 TB/dev of collective-permute traffic on kimi-k2 train_4k).
+    "kv_seq": [None],
+    "embed": [None],
+    "vocab": ["model"],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    # NOTE: no "head_dim" fallback — sharding the contraction dim of the
+    # attention einsums makes XLA emit partial-sum all-reduces of the score
+    # tensor inside the q-chunk loop (measured 28 s/step collective term on
+    # gemma-2b). Archs whose heads don't divide the model axis replicate
+    # attention compute in the baseline; the §Perf hillclimb shards it by
+    # sequence (context parallelism) instead.
+    "head_dim": [None],
+    "mlp": ["model"],
+    "expert": ["model"],
+    "expert_mlp": [None],
+    "lru": ["model"],
+    "conv": [None],
+    "layers": [None],
+    "stack": [None],
+    "capacity": ["__data__"],  # MoE dispatch buffers
+    "img": [None],
+    "frames": [None],
+}
+
+FSDP_RULES: Dict[str, Sequence[Axes]] = {
+    # With FSDP on, any still-unsharded big dim picks up the data axes.
+    "embed": ["__data__"],
+    "mlp": ["__data__"],
+    "expert_mlp": ["__data__"],
+    "vocab_fsdp": ["__data__"],
+}
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+@dataclass
+class MeshRules:
+    mesh: Mesh
+    fsdp: bool = False
+    overrides: Dict[str, Sequence[Axes]] = field(default_factory=dict)
+
+    def _expand(self, cand: Axes) -> Optional[Tuple[str, ...]]:
+        if cand is None:
+            return None
+        if cand == "__data__":
+            return _data_axes(self.mesh)
+        if isinstance(cand, str):
+            return (cand,)
+        out = []
+        for c in cand:
+            out.extend(_data_axes(self.mesh) if c == "__data__" else [c])
+        return tuple(out)
+
+    def _axis_size(self, axes: Tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def spec_for(self, logical: Tuple, shape: Tuple[int, ...]) -> P:
+        """Build a PartitionSpec for one leaf."""
+        assert len(logical) == len(shape), (logical, shape)
+        used: set = set()
+        entries = []
+        # pass 1: primary rules
+        for name, dim in zip(logical, shape):
+            entries.append(self._assign(name, dim, used, DEFAULT_RULES))
+        # pass 2: FSDP picks up remaining big dims
+        if self.fsdp:
+            for i, (name, dim) in enumerate(zip(logical, shape)):
+                if entries[i] is None:
+                    entries[i] = self._assign(name, dim, used, FSDP_RULES)
+        return P(*entries)
+
+    def _assign(self, name, dim, used, table) -> Optional[Tuple[str, ...]]:
+        if name is None:
+            return None
+        rules = self.overrides.get(name, table.get(name))
+        if not rules:
+            return None
+        for cand in rules:
+            axes = self._expand(cand)
+            if axes is None:
+                return None
+            if any(a in used for a in axes):
+                continue
+            if any(a not in self.mesh.shape for a in axes):
+                continue
+            if dim % self._axis_size(axes) != 0:
+                continue
+            used.update(axes)
+            return axes if len(axes) > 1 else axes[0]
+        return None
+
+    def sharding_for(self, logical: Tuple, shape: Tuple[int, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical, shape))
+
+
+def _is_axes_leaf(x) -> bool:
+    """An axes tuple is all str/None — distinguishes it from *structural*
+    tuples in the tree (e.g. per-stack cache tuples)."""
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def logical_to_spec(rules: MeshRules, axes_tree, shape_tree):
+    """Map (axes_tree, shape_tree of arrays/SDS) -> tree of PartitionSpec."""
+    return jax.tree.map(
+        lambda ax, leaf: rules.spec_for(tuple(ax), tuple(leaf.shape)),
+        axes_tree,
+        shape_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def shard_tree(rules: MeshRules, axes_tree, shape_tree):
+    """Tree of NamedSharding for jit in_shardings/out_shardings."""
+    return jax.tree.map(
+        lambda ax, leaf: rules.sharding_for(tuple(ax), tuple(leaf.shape)),
+        axes_tree,
+        shape_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def constrain(x, rules: Optional[MeshRules], logical: Tuple):
+    """with_sharding_constraint by logical axes (no-op when rules is None)."""
+    if rules is None:
+        return x
+    spec = rules.spec_for(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,2 @@
+from repro.train.optim import make_optimizer
+from repro.train.step import make_train_step, make_prefill_step, make_decode_step

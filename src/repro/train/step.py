@@ -1,0 +1,150 @@
+"""Step factories: train_step (loss + grad + optimizer update), prefill_step,
+decode_step. Each factory returns (fn, in_shardings, out_shardings,
+abstract_inputs) ready for ``jax.jit(...).lower(...).compile()`` — the
+multi-pod dry-run path — and equally runnable on concrete arrays (smoke
+tests / examples use the same code with rules=None).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models.model_api import ModelDef
+from repro.sharding.rules import MeshRules, shard_tree
+from repro.train.optim import make_optimizer, compress_grads_int8, init_error_fb
+from repro.utils.tree import Param, split_params
+
+
+def _shardings_of(rules: Optional[MeshRules], param_tree):
+    if rules is None:
+        return None
+    values, axes = split_params(param_tree)
+    return shard_tree(rules, axes, values)
+
+
+def make_train_step(
+    model: ModelDef,
+    rules: Optional[MeshRules] = None,
+    lr: float = 1e-4,
+    grad_compression: bool = False,
+):
+    """Returns (train_step, state_shardings, batch_shardings).
+
+    state = {"params": values, "opt": opt_state, "step": scalar[, "efb": ...]}
+    """
+    opt_init, opt_update = make_optimizer(model.cfg.optimizer, lr=lr)
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return model.loss(params, batch, rules)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        if grad_compression:
+            grads, efb = compress_grads_int8(grads, state["efb"])
+        new_params, new_opt = opt_update(
+            state["params"], grads, state["opt"], state["step"]
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if grad_compression:
+            new_state["efb"] = efb
+        return new_state, {"loss": loss}
+
+    def init_state(key):
+        params = model.init(key)
+        values, _ = split_params(params)
+        st = {"params": values, "opt": opt_init(values), "step": jnp.int32(0)}
+        if grad_compression:
+            st["efb"] = init_error_fb(values)
+        return st
+
+    def abstract_state():
+        params = model.abstract_init()
+        values, axes = split_params(params)
+        opt = jax.eval_shape(opt_init, values)
+        st = {
+            "params": values,
+            "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if grad_compression:
+            st["efb"] = jax.eval_shape(init_error_fb, values)
+        return st
+
+    def state_shardings():
+        assert rules is not None
+        params = model.abstract_init()
+        values, axes = split_params(params)
+        pshard = shard_tree(rules, axes, values)
+        opt_abs = jax.eval_shape(opt_init, values)
+
+        # Optimizer state inherits the param sharding leaf-by-leaf where the
+        # shapes match (adam m/v, efb); adafactor's factored vr/vc stats are
+        # reductions over the last / second-to-last dim -> reduced axes.
+        def per_param(ax, val, sub):
+            def shard_like(leaf):
+                if leaf.shape == val.shape:
+                    return rules.sharding_for(tuple(ax), tuple(val.shape))
+                if len(leaf.shape) == len(val.shape) - 1:
+                    if leaf.shape == val.shape[:-1]:  # vr
+                        return rules.sharding_for(tuple(ax[:-1]), tuple(leaf.shape))
+                    if leaf.shape == val.shape[:-2] + val.shape[-1:]:  # vc
+                        return rules.sharding_for(
+                            tuple(ax[:-2] + ax[-1:]), tuple(leaf.shape)
+                        )
+                return rules.sharding_for((None,) * len(leaf.shape), tuple(leaf.shape))
+
+            return jax.tree.map(shard_like, sub)
+
+        values_abs, axes = split_params(model.abstract_init())
+        opt_sh = jax.tree.map(
+            per_param,
+            axes,
+            values_abs,
+            opt_abs,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x
+            ),
+        )
+        st = {
+            "params": pshard,
+            "opt": opt_sh,
+            "step": rules.sharding_for((), ()),
+        }
+        if grad_compression:
+            st["efb"] = pshard
+        return st
+
+    def batch_shardings(shape: ShapeCfg):
+        assert rules is not None
+        specs = model.input_specs(shape)
+        values, axes = split_params(specs)
+        return shard_tree(rules, axes, values)
+
+    return train_step, init_state, abstract_state, state_shardings, batch_shardings
+
+
+def make_prefill_step(model: ModelDef, rules: Optional[MeshRules] = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, rules)
+
+    return prefill_step
+
+
+def make_decode_step(model: ModelDef, rules: Optional[MeshRules] = None):
+    def decode_step(params, tokens, pos, caches):
+        return model.decode(params, tokens, pos, caches, rules)
+
+    return decode_step
+
+
+def cache_shardings(model: ModelDef, rules: MeshRules, B: int, seq_len: int):
+    cache = model.abstract_cache(B, seq_len)
+    values, axes = split_params(cache)
+    return shard_tree(rules, axes, values), values

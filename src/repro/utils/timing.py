@@ -1,0 +1,31 @@
+"""Wall-clock timing helpers for the measured tier of the evaluation."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+def now_s() -> float:
+    return time.perf_counter()
+
+
+class Timer:
+    """Accumulating named timer; .times maps name -> list of seconds."""
+
+    def __init__(self):
+        self.times = {}
+
+    @contextmanager
+    def section(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.times.setdefault(name, []).append(time.perf_counter() - t0)
+
+    def mean(self, name: str) -> float:
+        xs = self.times.get(name, [])
+        return sum(xs) / len(xs) if xs else 0.0
+
+    def total(self, name: str) -> float:
+        return sum(self.times.get(name, []))

@@ -1,0 +1,31 @@
+"""Deliverable (e) from inside the test suite: one real dry-run cell
+(lower + compile at 512 forced host devices) runs in a subprocess so this
+process keeps its single-device view. Uses the cheapest cell
+(whisper-tiny prefill) to stay fast."""
+import json
+import subprocess
+import sys
+
+
+def test_dryrun_cell_compiles_and_reports(tmp_path):
+    out = tmp_path / "cell.json"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "whisper-tiny", "--shape", "prefill_32k",
+            "--mesh", "multi", "--out", str(out),
+        ],
+        capture_output=True,
+        text=True,
+        timeout=500,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    r = json.load(open(out))
+    assert r["mesh"] == "multi"
+    assert r["compile_s"] > 0
+    rf = r["roofline"]
+    assert set(rf) >= {"compute_s", "memory_s", "collective_s", "bottleneck"}
+    assert rf["compute_s"] > 0 and rf["memory_s"] > 0
+    assert r["cost"]["flops_per_device"] > r["cost"]["cost_analysis_flops_body_once"] / 10
+    assert r["collectives"]["_total"]["count"] >= 0

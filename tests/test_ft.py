@@ -1,0 +1,103 @@
+"""FT mechanism tests: agent/core/hybrid migration, decision rules,
+dependency-graph surgery, spare selection, checkpoint store."""
+import numpy as np
+import pytest
+
+from repro.core.agent import Agent
+from repro.core.hybrid import HybridUnit
+from repro.core.migration import DependencyGraph
+from repro.core.rules import SD_THRESHOLD_BYTES, Z_THRESHOLD, decide, negotiate
+from repro.core.runtime import ClusterRuntime
+from repro.core.virtual_core import VirtualCore
+from repro.utils.tree import tree_hash
+
+
+def _payload(n=1024):
+    return {"partial": np.arange(n, dtype=np.float32), "cursor": 7}
+
+
+def test_agent_migration_lossless_and_edges_reestablished():
+    rt = ClusterRuntime(n_hosts=4, n_spares=1, profile="placentia")
+    p = _payload()
+    h0 = tree_hash(p)
+    rt.occupy(0, p, "agent:0")
+    z_before = rt.graph.degree(0)
+    ag = Agent(0, 0, p)
+    rep = ag.migrate(rt)
+    assert rep["hash_ok"]
+    assert tree_hash(ag.payload) == h0
+    assert rt.hosts[0].shard is None  # old host released
+    assert rt.hosts[ag.host].shard is not None
+    assert rt.graph.degree(ag.host) == z_before  # all Z edges repaired
+    assert rt.graph.degree(0) == 0
+
+
+def test_core_migration_faster_control_plane_than_agent():
+    """The paper's core observation: virtual-core migration re-instates
+    faster (no per-edge handshakes, no agent wrapper layer)."""
+    reps = {}
+    for mech in ("agent", "core"):
+        rt = ClusterRuntime(n_hosts=6, n_spares=1, profile="placentia")
+        p = _payload()
+        rt.occupy(0, p, mech)
+        if mech == "agent":
+            reps[mech] = Agent(0, 0, p).migrate(rt)
+        else:
+            reps[mech] = VirtualCore(0, 0).migrate_job(rt)
+    assert reps["core"]["reinstate_s"] < reps["agent"]["reinstate_s"]
+
+
+def test_rules_match_paper_thresholds():
+    small, big = 1024, SD_THRESHOLD_BYTES * 2
+    assert decide(4, big, big).mechanism == "core"  # Rule 1
+    assert decide(Z_THRESHOLD, big, big).mechanism == "core"
+    assert decide(50, small, big).mechanism == "agent"  # Rule 2
+    assert decide(50, big, small).mechanism == "agent"  # Rule 3
+    assert decide(50, big, big).mechanism == "core"  # tie -> core
+    # negotiation: agreement short-circuits, conflict falls to the rules
+    assert negotiate("agent", "agent", 50, big, big).mechanism == "agent"
+    assert negotiate("agent", "core", 4, small, small).mechanism == "core"
+
+
+def test_hybrid_dispatch_follows_rules():
+    rt = ClusterRuntime(n_hosts=4, n_spares=1, profile="placentia")
+    p = _payload()
+    rt.occupy(0, p, "hybrid:0")
+    unit = HybridUnit(Agent(0, 0, p), VirtualCore(0, 0))
+    rep = unit.handle_prediction(rt)  # Z small -> core (Rule 1)
+    assert rep["mechanism"] == "core"
+    assert rep["hash_ok"]
+
+
+def test_spare_preferred_then_healthy_neighbour():
+    rt = ClusterRuntime(n_hosts=4, n_spares=1, profile="placentia")
+    assert rt.pick_target(0) == 4  # the spare
+    rt.occupy(4, _payload(), "x")  # spare taken
+    t = rt.pick_target(0)
+    assert t != 0 and rt.healthy(t)
+
+
+def test_failed_neighbour_excluded():
+    rt = ClusterRuntime(n_hosts=4, n_spares=0, profile="placentia")
+    rt.heartbeats.mark_failed(1)
+    t = rt.pick_target(0)
+    assert t not in (0, 1)
+
+
+def test_reduction_tree_topology():
+    g = DependencyGraph.reduction_tree(8)
+    # leaves have 1 out-edge; internal nodes have fan-in 2
+    assert all(len(g.out_edges[i]) == 1 for i in range(8))
+    root = max(g.in_edges)
+    assert len(g.in_edges[root]) == 2
+    # paper: binary-tree node has Z = 3 (2 in + 1 out)
+    internal = g.in_edges[8]  # first internal node
+    assert len(g.in_edges[8]) == 2
+
+
+def test_genome_star_topology_z4():
+    """Paper genome experiment: 3 search nodes -> 1 combiner, Z=4 on none;
+    combiner has 3 in-edges, search nodes 1 out-edge each."""
+    g = DependencyGraph.star(3)
+    assert g.degree(3) == 3
+    assert all(g.degree(i) == 1 for i in range(3))

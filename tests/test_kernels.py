@@ -1,0 +1,149 @@
+"""Per-kernel correctness: shape/dtype sweeps in interpret mode against the
+independent pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru import rglru_scan
+from repro.kernels.rwkv6 import wkv6
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,K,S,hd", [
+    (1, 2, 2, 64, 16),
+    (2, 4, 2, 128, 32),
+    (1, 8, 1, 256, 64),   # MQA, gemma-style
+    (2, 6, 6, 128, 64),   # MHA, whisper-style heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, H, K, S, hd, dtype):
+    key = jax.random.key(B * 1000 + S)
+    q = jax.random.normal(key, (B, H, S, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, K, S, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, K, S, hd), dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        out.astype(np.float32), want.astype(np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_window(window):
+    B, H, K, S, hd = 2, 4, 2, 128, 32
+    key = jax.random.key(7)
+    q = jax.random.normal(key, (B, H, S, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, K, S, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, K, S, hd))
+    out = flash_attention(q, k, v, window=window, block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,S,N", [(1, 1, 32, 8), (2, 4, 128, 16), (1, 2, 96, 32)])
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_wkv6_vs_sequential_oracle(B, H, S, N, chunk):
+    key = jax.random.key(S + N)
+    r = jax.random.normal(key, (B, H, S, N)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, N)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, N)) * 0.5
+    wlog = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 3), (B, H, S, N)) * 0.5 - 1)
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, N)) * 0.3
+    st = jax.random.normal(jax.random.fold_in(key, 5), (B, H, N, N)) * 0.1
+    y, sT = wkv6(r, k, v, wlog, u, st.astype(jnp.float32), chunk=chunk)
+    y_r, sT_r = ref.wkv6_ref(r, k, v, wlog, u, st)
+    np.testing.assert_allclose(y, y_r, atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(sT, sT_r, atol=3e-5, rtol=3e-5)
+
+
+def test_wkv6_strong_decay_stability():
+    """Strong data-dependent decay must not overflow (the pairwise-difference
+    formulation keeps every exponent <= 0)."""
+    B, H, S, N = 1, 2, 256, 16
+    key = jax.random.key(0)
+    r = jax.random.normal(key, (B, H, S, N))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, H, S, N))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, N))
+    wlog = jnp.full((B, H, S, N), -8.0)  # decay ~ e^-8 per step
+    u = jnp.zeros((H, N))
+    st = jnp.zeros((B, H, N, N), jnp.float32)
+    y, sT = wkv6(r, k, v, wlog, u, st, chunk=128)
+    assert not jnp.any(jnp.isnan(y)) and not jnp.any(jnp.isinf(y))
+    y_r, _ = ref.wkv6_ref(r, k, v, wlog, u, st)
+    np.testing.assert_allclose(y, y_r, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,W", [(1, 64, 32), (2, 128, 64), (2, 192, 128)])
+@pytest.mark.parametrize("chunk", [32, 128])
+def test_rglru_vs_sequential_oracle(B, S, W, chunk):
+    key = jax.random.key(S + W)
+    log_a = -jnp.exp(jax.random.normal(key, (B, S, W)) * 0.5)
+    m = jax.random.normal(jax.random.fold_in(key, 1), (B, S, W))
+    h0 = jax.random.normal(jax.random.fold_in(key, 2), (B, W))
+    y, hT = rglru_scan(log_a, m, h0, chunk=chunk, block_w=32)
+    y_r, hT_r = ref.rglru_ref(log_a, m, h0)
+    np.testing.assert_allclose(y, y_r, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(hT, hT_r, atol=2e-5, rtol=2e-5)
+
+
+def test_ops_dispatch_xla_matches_pallas():
+    B, H, K, S, hd = 1, 2, 1, 64, 16
+    key = jax.random.key(3)
+    q = jax.random.normal(key, (B, H, S, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, K, S, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, K, S, hd))
+    a = ops.attention(q, k, v, impl="pallas")
+    b = ops.attention(q, k, v, impl="xla")
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,K,S,hd", [(2, 4, 2, 256, 32), (1, 8, 1, 512, 64)])
+@pytest.mark.parametrize("window", [0, 128])
+def test_flash_decode_vs_ref(B, H, K, S, hd, window):
+    from repro.kernels.decode_attention import flash_decode, flash_decode_ref
+
+    key = jax.random.key(S + hd)
+    q = jax.random.normal(key, (B, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, K, S, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, K, S, hd))
+    pos = S - 10
+    # ring-buffer style kpos with some empty (-1) slots
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    kpos = jnp.where(kpos <= pos, kpos, -1)
+    out = flash_decode(q, k, v, kpos, jnp.int32(pos), window=window, block_k=128)
+    want = flash_decode_ref(q, k, v, kpos, jnp.int32(pos), window=window)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_decode_matches_model_decode_attention():
+    """The kernel must agree with the model's XLA decode attention path."""
+    from repro.kernels.decode_attention import flash_decode_ref
+    from repro.models.layers import _sdpa
+
+    B, H, K, S, hd = 2, 4, 2, 64, 16
+    key = jax.random.key(9)
+    q = jax.random.normal(key, (B, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, K, S, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, K, S, hd))
+    pos = 40
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    a = flash_decode_ref(q, k, v, kpos, jnp.int32(pos))
+    # model path: q (B,1,n,g,hd), k/v (B,S,n,hd)
+    q5 = q.reshape(B, 1, K, H // K, hd)
+    b = _sdpa(
+        q5,
+        jnp.moveaxis(k, 1, 2),
+        jnp.moveaxis(v, 1, 2),
+        qpos=jnp.full((B, 1), pos, jnp.int32),
+        kpos=kpos,
+        kvalid=kpos >= 0,
+        window=0,
+        causal=True,
+    ).reshape(B, H, hd)
+    np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)

@@ -1,0 +1,130 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.migration import DependencyGraph
+from repro.core.rules import decide
+from repro.train.optim import compress_grads_int8, init_error_fb
+from repro.utils.tree import tree_hash
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    z=st.integers(min_value=0, max_value=10_000),
+    s_d=st.integers(min_value=0, max_value=2 ** 45),
+    s_p=st.integers(min_value=0, max_value=2 ** 45),
+)
+def test_rules_total_and_deterministic(z, s_d, s_p):
+    d1 = decide(z, s_d, s_p)
+    d2 = decide(z, s_d, s_p)
+    assert d1.mechanism in ("agent", "core")
+    assert d1 == d2
+    if z <= 10:
+        assert d1.mechanism == "core"  # Rule 1 always wins first
+
+
+@given(
+    n=st.integers(min_value=2, max_value=40),
+    old=st.integers(min_value=0, max_value=39),
+    new=st.integers(min_value=100, max_value=139),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_graph_remap_preserves_edge_count(n, old, new, seed):
+    old = old % n
+    rng = np.random.default_rng(seed)
+    g = DependencyGraph()
+    for _ in range(3 * n):
+        a, b = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if a == b:
+            continue
+        g.out_edges.setdefault(a, []).append(b)
+        g.in_edges.setdefault(b, []).append(a)
+    total_before = sum(len(v) for v in g.out_edges.values())
+    deg_before = g.degree(old)
+    g.remap(old, new)
+    total_after = sum(len(v) for v in g.out_edges.values())
+    assert total_before == total_after
+    assert g.degree(new) == deg_before
+    assert g.degree(old) == 0
+
+
+@given(
+    shapes=st.lists(st.integers(min_value=1, max_value=64), min_size=1, max_size=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_migration_hash_preserved_arbitrary_payload(shapes, seed):
+    from repro.core.agent import Agent
+    from repro.core.runtime import ClusterRuntime
+
+    rng = np.random.default_rng(seed)
+    payload = {f"a{i}": rng.normal(size=s).astype(np.float32) for i, s in enumerate(shapes)}
+    payload["meta"] = {"cursor": int(rng.integers(0, 1 << 30))}
+    h = tree_hash(payload)
+    rt = ClusterRuntime(n_hosts=3, n_spares=1, profile="placentia")
+    rt.occupy(0, payload, "agent:0")
+    ag = Agent(0, 0, payload)
+    rep = ag.migrate(rt)
+    assert rep["hash_ok"]
+    assert tree_hash(rt.hosts[ag.host].shard) == h
+
+
+@given(seed=st.integers(min_value=0, max_value=1000))
+def test_grad_compression_error_feedback_bounded(seed):
+    """int8 quantisation with error feedback: the residual carried forward
+    is bounded by one quantisation step (scale)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    efb = init_error_fb(g)
+    for _ in range(3):
+        q, efb = compress_grads_int8(g, efb)
+        scale = float(jnp.max(jnp.abs(g["w"] + 0))) / 127.0
+        assert float(jnp.max(jnp.abs(efb["w"]))) <= scale * 1.01
+
+
+@given(
+    n_shards=st.integers(min_value=1, max_value=32),
+    n_dead=st.integers(min_value=0, max_value=6),
+    seed=st.integers(min_value=0, max_value=99),
+)
+def test_elastic_replan_covers_all_shards(n_shards, n_dead, seed):
+    from repro.core.elastic import replan
+
+    rng = np.random.default_rng(seed)
+    hosts = list(range(8))
+    dead = set(rng.choice(8, size=min(n_dead, 7), replace=False).tolist())
+    alive = [h for h in hosts if h not in dead]
+    plan = replan(n_shards, alive)
+    placed = sorted(s for shs in plan.assignment.values() for s in shs)
+    assert placed == list(range(n_shards))  # every shard exactly once
+    loads = [len(v) for v in plan.assignment.values()]
+    assert max(loads) - min(loads) <= 1  # balanced
+
+
+@given(
+    gb=st.integers(min_value=1, max_value=512),
+    n=st.integers(min_value=1, max_value=16),
+)
+def test_reshard_batch_preserves_global_batch(gb, n):
+    from repro.core.elastic import reshard_batch
+
+    parts = reshard_batch(gb, n)
+    assert sum(parts) == gb
+    assert max(parts) - min(parts) <= 1
+
+
+@given(
+    stragglers=st.lists(st.integers(min_value=0, max_value=7), max_size=3, unique=True),
+)
+def test_straggler_mitigation_preserves_global_batch(stragglers):
+    from repro.core.straggler import mitigate
+
+    per_host = [8] * 8
+    out = mitigate(per_host, stragglers)
+    assert sum(out) == sum(per_host)
+    for s in stragglers:
+        if len(stragglers) < 8:
+            assert out[s] <= per_host[s]

@@ -1,0 +1,94 @@
+"""End-to-end behaviour tests for the paper's system: the genome-searching
+job (parallel reduction) survives single-node failures under every FT
+approach with a bit-identical hit table, validating the paper's central
+feasibility claim + decision rules on the real workload."""
+import numpy as np
+import pytest
+
+from repro.core.agent import Agent
+from repro.core.hybrid import HybridUnit
+from repro.core.migration import DependencyGraph
+from repro.core.rules import decide
+from repro.core.runtime import ClusterRuntime
+from repro.core.virtual_core import VirtualCore
+from repro.data.genome import GenomeSearchJob, make_genome
+
+
+@pytest.fixture(scope="module")
+def job():
+    genome, patterns, truth = make_genome(length=20000, n_patterns=8, seed=3)
+    return GenomeSearchJob(genome, patterns, n_search=3), truth
+
+
+def _reference_hits(job):
+    states = job.sub_job_states()
+    for st in states:
+        while job.run_sub_job_step(st):
+            pass
+    return job.combine(states)
+
+
+def test_search_finds_all_planted_patterns(job):
+    j, truth = job
+    hits = _reference_hits(j)
+    found = {(h[1], h[3], h[4]) for h in hits}
+    for (pos, pid, strand) in truth:
+        assert (pos, pid, strand) in found, (pos, pid, strand)
+
+
+def test_output_record_format(job):
+    j, _ = job
+    hits = _reference_hits(j)
+    chrom, start, end, pid, strand = hits[0]
+    assert chrom == "chrI" and strand in "+-" and end - start >= 14  # Fig 14
+
+
+@pytest.mark.parametrize("mechanism", ["agent", "core", "hybrid"])
+def test_genome_job_survives_failure_with_identical_results(job, mechanism):
+    """Fail the busiest search node mid-job; FT migrates its sub-job state;
+    final combined table must equal the failure-free run exactly."""
+    j, _ = job
+    want = _reference_hits(j)
+
+    rt = ClusterRuntime(n_hosts=4, n_spares=1, profile="placentia",
+                        graph=DependencyGraph.star(j.n_search))
+    states = j.sub_job_states()
+    for i, st in enumerate(states):
+        rt.occupy(i, st, f"{mechanism}:{i}")
+
+    # run node 0 for one chunk, then a failure is predicted on it
+    j.run_sub_job_step(states[0])
+    if mechanism == "agent":
+        ag = Agent(0, 0, states[0])
+        rep = ag.migrate(rt)
+        moved = ag.payload
+    elif mechanism == "core":
+        vc = VirtualCore(0, 0)
+        rep = vc.migrate_job(rt)
+        moved = rt.hosts[vc.host].shard
+    else:
+        unit = HybridUnit(Agent(0, 0, states[0]), VirtualCore(0, 0))
+        rep = unit.handle_prediction(rt)
+        moved = rt.hosts[unit.host].shard
+    assert rep["hash_ok"]
+    assert rep["reinstate_s"] < 1.0  # paper: sub-second reinstate
+
+    # the migrated copy resumes; the original host is dead
+    states[0] = moved
+    for st in states:
+        while j.run_sub_job_step(st):
+            pass
+    got = j.combine(states)
+    assert got == want
+
+
+def test_genome_decision_rule_validation(job):
+    """Paper §Genome: Z=4 with three search + one combine node -> Rule 1
+    selects core intelligence; large S_d flips toward agent only when Z>10."""
+    j, _ = job
+    g = DependencyGraph.star(j.n_search)
+    z_combiner = g.degree(j.n_search)
+    s_d = j.genome.nbytes
+    assert z_combiner + 1 <= 10
+    assert decide(z_combiner + 1, s_d, s_d).mechanism == "core"
+    assert decide(12, s_d, s_d).mechanism == "agent"  # 512 MB-scale < 2^24 KB

@@ -1,0 +1,114 @@
+"""Integration: the FT trainer on a real training job — losslessness under
+predicted and unpredicted failures, across all three policies; predictor +
+sim claim checks."""
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.failure import FailureEvent, FailureModel
+from repro.core.trainer import FTTrainer
+from repro.models import build_model
+from repro.train.step import make_train_step
+from repro.utils.tree import tree_hash
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("qwen2.5-3b").reduced()
+    model = build_model(cfg)
+    ts, init_state, *_ = make_train_step(model)
+
+    def mk_batch(step):
+        return {
+            "tokens": np.asarray(
+                jax.random.randint(jax.random.key(step), (2, 32), 0, cfg.vocab)
+            )
+        }
+
+    def mk_state():
+        return init_state(jax.random.key(0))
+
+    return ts, mk_state, mk_batch
+
+
+def _run(setup, tmpdir, policy, failures, **kw):
+    ts, mk_state, mk_batch = setup
+    d = str(tmpdir / policy)
+    shutil.rmtree(d, ignore_errors=True)
+    tr = FTTrainer(ts, mk_state, mk_batch, policy=policy, ckpt_dir=d,
+                   ckpt_every=4, seed=2, **kw)
+    rep = tr.run(16, failures=failures, step_time_s=1.0)
+    return tree_hash(jax.tree.map(np.asarray, tr.state)), rep
+
+
+@pytest.mark.parametrize("policy", ["hybrid", "agent", "core", "checkpoint"])
+def test_policies_lossless_under_failures(setup, tmp_path, policy):
+    ref_hash, _ = _run(setup, tmp_path, policy + "_ref", [])
+    fails = [
+        FailureEvent(t=5.0, node=0, predictable=True),
+        FailureEvent(t=11.0, node=0, predictable=False),
+    ]
+    h, rep = _run(setup, tmp_path, policy, fails)
+    assert h == ref_hash, (policy, rep)
+    if policy in ("hybrid", "agent", "core"):
+        assert rep.migrations >= 1
+        assert rep.steps_reexecuted <= 4  # only the unpredicted one rolls back
+    else:
+        assert rep.restores == 2
+
+
+def test_proactive_beats_reactive_on_reexecution(setup, tmp_path):
+    fails = [FailureEvent(t=7.0, node=0, predictable=True)]
+    _, rep_pro = _run(setup, tmp_path, "hybrid", fails)
+    fails_r = [FailureEvent(t=7.0, node=0, predictable=False)]
+    _, rep_re = _run(setup, tmp_path, "checkpoint", fails_r)
+    assert rep_pro.steps_reexecuted == 0
+    assert rep_re.steps_reexecuted > 0
+
+
+def test_failure_model_statistics():
+    fm = FailureModel(kind="random", n_nodes=8, horizon_s=3600 * 100, seed=3)
+    evs = fm.events()
+    assert len(evs) == 100
+    frac = np.mean([e.predictable for e in evs])
+    assert 0.15 < frac < 0.45  # ~29%
+    from repro.core.failure import mean_random_failure_time
+
+    m = mean_random_failure_time(3600.0)
+    assert abs(m - 1800.0) < 60  # uniform mean ~30 min (paper measured 31:14)
+
+
+def test_table1_headline_claims():
+    from repro.core.sim import measure_micro, strategy_rows
+
+    micro = measure_micro("placentia", n_nodes=4, z=4, s_d_bytes=(2 ** 19) * 1024)
+    rows = strategy_rows(1.0, [1.0], micro=micro, periodic_offset_min=15.0)
+    by = {r.strategy: r for r in rows}
+    ck = (by["central_single"].exec_1random_s - 3600) / 3600
+    ag = (by["core"].exec_1random_s - 3600) / 3600
+    assert 0.75 < ck < 1.0, ck  # checkpointing ~ +90%
+    assert 0.05 < ag < 0.15, ag  # multi-agent ~ +10%
+    assert by["hybrid"].exec_1random_s == by["core"].exec_1random_s  # Rule 1
+
+
+def test_predictor_operating_point():
+    from repro.core.predictor import FailurePredictor
+
+    stats = FailurePredictor.train(seed=1).evaluate(seed=42, n=3000)
+    assert abs(stats["coverage"] - 0.29) < 0.08
+    assert abs(stats["precision"] - 0.64) < 0.10
+
+
+def test_speculative_trainer_lossless_and_cheaper_wire(setup, tmp_path):
+    """Speculative pre-staging: lossless, and the migration's modelled wire
+    cost at migrate time is smaller (only the delta crosses)."""
+    ref_hash, _ = _run(setup, tmp_path, "spec_ref", [])
+    fails = [FailureEvent(t=9.0, node=0, predictable=True)]
+    h, rep = _run(setup, tmp_path, "hybrid", fails, speculative=True)
+    assert h == ref_hash
+    stages = [e for e in rep.events if e.get("kind") == "speculative_stage"]
+    assert stages, "warning band should have pre-staged"
+    assert rep.migrations == 1 and rep.steps_reexecuted == 0
