@@ -1,0 +1,181 @@
+"""Scenario-engine benchmark: every registered campaign under every FT
+strategy, plus the vectorised Monte-Carlo speedup certification.
+
+Emits a JSON report (BENCH_OUT/scenarios.json) with three sections:
+
+  paper_exactness   the two Table 1/2 scenarios re-expressed as registered
+                    specs must match the seed simulator's closed-form
+                    totals to the second (bit-for-bit: same MicroCosts);
+  campaigns         per scenario x approach: engine totals, migrations,
+                    blacklistings, re-provisionings, survival;
+  montecarlo        >= N seeds of the closed-form model via jax.vmap vs the
+                    one-trial-per-Python-call baseline; asserts >= 10x.
+
+Usage:
+  python benchmarks/bench_scenarios.py [--seeds 2000] [--dry-run]
+
+--dry-run swaps in tiny trial counts and skips the speedup assertion — the
+CI smoke path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import OUT_DIR
+from repro.core.sim import ALL_STRATEGIES, fmt_hms, measure_micro, scenario_totals, strategy_rows
+from repro.scenarios import mc_totals, python_loop_baseline, registry
+from repro.scenarios.engine import CampaignEngine
+from repro.scenarios.montecarlo import params_from_scenario
+
+PAPER_SCENARIOS = ("table1_periodic", "table1_random", "table2_random")
+MIN_SPEEDUP = 10.0
+
+
+def check_paper_exactness(micro) -> dict:
+    """Registered paper specs vs the seed simulator's strategy_rows."""
+    out = {}
+    ok_all = True
+    for name in PAPER_SCENARIOS:
+        spec = registry.get(name)
+        proc = spec.processes[0]
+        offset_min = proc.params.get("offset_s", 900.0) / 60.0 if proc.kind == "periodic" else None
+        rows = strategy_rows(
+            spec.horizon_s / 3600.0,
+            [spec.period_s / 3600.0],
+            n_nodes=spec.n_nodes,
+            micro=micro,
+            periodic_offset_min=offset_min,
+        )
+        via_scenario = scenario_totals(spec, micro=micro)
+        rec = {}
+        for r in rows:
+            if r.strategy not in via_scenario:
+                continue
+            seed_total = (
+                r.exec_1periodic_s if spec.closed_form == "periodic" else r.exec_1random_s
+            )
+            got = via_scenario[r.strategy]["total_s"]
+            exact = bool(got == seed_total)
+            ok_all &= exact
+            rec[r.strategy] = {
+                "seed_simulator": fmt_hms(seed_total),
+                "scenario_engine": fmt_hms(got),
+                "exact": exact,
+            }
+        out[name] = rec
+    out["all_exact"] = ok_all
+    return out
+
+
+def run_campaigns(micro, scenarios=None) -> dict:
+    out = {}
+    for name in scenarios or registry.names():
+        spec = registry.get(name)
+        if spec.closed_form:
+            continue  # priced above, exactly
+        per = {}
+        for approach in ALL_STRATEGIES:
+            res = CampaignEngine(spec, approach, micro=micro).run()
+            d = res.to_dict()
+            d["total"] = fmt_hms(res.total_s) if res.total_s is not None else None
+            per[approach] = d
+        out[name] = per
+    return out
+
+
+def run_montecarlo(micro, n_seeds: int, assert_speedup: bool) -> dict:
+    spec = registry.get("table2_random")
+    out = {"n_seeds": n_seeds, "strategies": {}}
+    for strat in ("central_single", "core"):
+        params = params_from_scenario(spec, strat, micro)
+        # proactive params are deterministic (no lost progress): mc_totals
+        # short-circuits, so only the stochastic strategies certify the
+        # vectorisation speedup
+        stochastic = params.lost_progress and params.fixed_lost_s is None
+
+        # warm-up compiles the jitted program; the paid path is steady-state
+        mc_totals(params, n_seeds=n_seeds, seed=0)
+        t0 = time.perf_counter()
+        mc = mc_totals(params, n_seeds=n_seeds, seed=1)
+        t_vec = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        base = python_loop_baseline(params, n_seeds=n_seeds, seed=1)
+        t_loop = time.perf_counter() - t0
+
+        speedup = t_loop / max(t_vec, 1e-9)
+        # same model, same seed count -> means agree to MC error
+        mean_gap = abs(mc["mean_s"] - float(base.mean())) / float(base.mean())
+        out["strategies"][strat] = {
+            "mean": fmt_hms(mc["mean_s"]),
+            "std_s": round(mc["std_s"], 1),
+            "p5": fmt_hms(mc["p5_s"]),
+            "p95": fmt_hms(mc["p95_s"]),
+            "vectorised_s": round(t_vec, 5),
+            "python_loop_s": round(t_loop, 5),
+            "speedup": round(speedup, 1),
+            "stochastic": stochastic,
+            "mean_gap_pct": round(100 * mean_gap, 3),
+        }
+        if assert_speedup:
+            if stochastic:
+                assert speedup >= MIN_SPEEDUP, (
+                    f"vectorised MC only {speedup:.1f}x faster than the Python loop "
+                    f"for {strat} (need >= {MIN_SPEEDUP}x)"
+                )
+            assert mean_gap < 0.02, f"MC mean diverged from baseline: {mean_gap:.3%}"
+    out["min_speedup_required"] = MIN_SPEEDUP
+    out["asserted"] = assert_speedup
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=2000, help="Monte-Carlo trials")
+    ap.add_argument("--dry-run", action="store_true", help="tiny counts, no asserts")
+    args = ap.parse_args(argv)
+
+    n_seeds = 64 if args.dry_run else max(args.seeds, 1000)
+    micro = measure_micro("placentia", n_nodes=4)
+
+    report = {
+        "paper_exactness": check_paper_exactness(micro),
+        "campaigns": run_campaigns(micro),
+        "montecarlo": run_montecarlo(micro, n_seeds, assert_speedup=not args.dry_run),
+    }
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "scenarios.json")
+    with open(path, "w") as f:
+        # .item() unboxes stray numpy scalars (np.float64 totals, np.bool_)
+        json.dump(report, f, indent=2, default=lambda o: o.item())
+
+    print(path)
+    print(f"paper_exactness: {'PASS' if report['paper_exactness']['all_exact'] else 'FAIL'}")
+    for name, per in report["campaigns"].items():
+        core = per["core"]
+        ck = per["central_single"]
+        fmt = lambda d: d["total"] if d["survived"] else f"LOST@{fmt_hms(d['failed_at_s'])}"
+        print(
+            f"  {name:20s} core={fmt(core):14s} central_single={fmt(ck):14s} "
+            f"events={core['n_events']} migrations={core['n_migrations']}"
+        )
+    for strat, mc in report["montecarlo"]["strategies"].items():
+        print(
+            f"  MC[{strat}] mean={mc['mean']} p95={mc['p95']} "
+            f"speedup={mc['speedup']}x (loop {mc['python_loop_s']}s vs vec {mc['vectorised_s']}s)"
+        )
+    if not report["paper_exactness"]["all_exact"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,6 +12,13 @@ Features (6): heartbeat latency jitter, load, ECC-corrected error count,
 temperature, page-fault rate, past-failure count. Degrading nodes drift
 upward in the first four — the signal the predictor learns. Unpredictable
 failures never leave `healthy` before dying (Fig 15b).
+
+Correlated degradation (scenario-engine extension): nodes may be grouped
+into *racks*; when a rack peer is degrading, a node's telemetry drifts
+part-way toward the degrading profile (shared PSU/cooling) even while its
+own latent state is still `healthy`. This is the signal the scenario
+engine's rack-correlated campaigns exercise: the predictor can see a rack
+outage coming from its neighbours' logs before its own node degrades.
 """
 from __future__ import annotations
 
@@ -37,7 +44,12 @@ class TelemetryModel:
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
 
-    def sample(self, state: str, past_failures: int = 0) -> np.ndarray:
+    def sample(
+        self, state: str, past_failures: int = 0, rack_stress: float = 0.0
+    ) -> np.ndarray:
+        """`rack_stress` in [0, 1]: fraction of rack peers currently degrading
+        or failed; pulls a healthy node's thermals/ECC toward the degrading
+        profile (shared power/cooling domain)."""
         r = self.rng
         if state == "degrading":
             lat = r.gamma(4.0, 0.8)  # latency jitter up
@@ -51,22 +63,48 @@ class TelemetryModel:
             ecc = r.poisson(0.3)
             temp = 55 + 15 * r.random()
             pf = r.gamma(2.0, 0.6)
+            if rack_stress > 0.0:
+                # correlated drift: interpolate toward the degrading means
+                lat += rack_stress * (3.2 - 0.7)  # gamma means: 4*0.8 vs 2*0.35
+                ecc += r.poisson(6.0 * rack_stress)
+                temp += rack_stress * (86.0 - 62.5)
         return np.array([lat, load, ecc, temp, pf, past_failures], np.float32)
 
 
 class HeartbeatService:
     """Ring heartbeats + health logs for a cluster of n nodes."""
 
-    def __init__(self, n_nodes: int, seed: int = 0, tick_s: float = 1.0):
+    def __init__(
+        self,
+        n_nodes: int,
+        seed: int = 0,
+        tick_s: float = 1.0,
+        racks: Optional[Dict[int, int]] = None,
+    ):
         self.n = n_nodes
         self.tick_s = tick_s
         self.tm = TelemetryModel(seed)
         self.health = {i: NodeHealth(i) for i in range(n_nodes)}
         self.logs: Dict[int, List[np.ndarray]] = {i: [] for i in range(n_nodes)}
         self.latency_ewma = np.zeros(n_nodes, np.float32)
+        self.racks: Dict[int, int] = racks or {}  # node -> rack id
 
     def neighbours(self, i: int):
         return [(i - 1) % self.n, (i + 1) % self.n]
+
+    def rack_peers(self, i: int) -> List[int]:
+        r = self.racks.get(i)
+        if r is None:
+            return []
+        return [j for j, rj in self.racks.items() if rj == r and j != i]
+
+    def rack_stress(self, i: int) -> float:
+        """Fraction of rack peers currently degrading or failed."""
+        peers = self.rack_peers(i)
+        if not peers:
+            return 0.0
+        bad = sum(1 for p in peers if self.health[p].state != "healthy")
+        return bad / len(peers)
 
     def mark_degrading(self, node: int):
         if self.health[node].state == "healthy":
@@ -89,7 +127,7 @@ class HeartbeatService:
             h = self.health[i]
             if h.state == "failed":
                 continue
-            f = self.tm.sample(h.state, h.past_failures)
+            f = self.tm.sample(h.state, h.past_failures, self.rack_stress(i))
             self.logs[i].append(f)
             self.latency_ewma[i] = 0.9 * self.latency_ewma[i] + 0.1 * f[0]
             out[i] = f

@@ -35,6 +35,7 @@ class ClusterRuntime:
         profile: str | ClusterProfile = "placentia",
         graph: Optional[DependencyGraph] = None,
         seed: int = 0,
+        racks: Optional[Dict[int, int]] = None,
     ):
         self.profile = get_profile(profile) if isinstance(profile, str) else profile
         self.hosts: Dict[int, VirtualHost] = {
@@ -42,10 +43,11 @@ class ClusterRuntime:
         }
         self.n_active = n_hosts
         self.spares: List[int] = list(range(n_hosts, n_hosts + n_spares))
-        self.heartbeats = HeartbeatService(n_hosts + n_spares, seed=seed)
+        self.heartbeats = HeartbeatService(n_hosts + n_spares, seed=seed, racks=racks)
         self.graph = graph or DependencyGraph.reduction_tree(n_hosts)
         self.predictor: Optional[FailurePredictor] = None
         self.events: List[dict] = []
+        self.blacklist: set = set()  # hosts barred from ever hosting work again
 
     # --- landscape knowledge (paper: agent knows its core + vicinity) -----
     def neighbours(self, hid: int) -> List[int]:
@@ -69,22 +71,73 @@ class ClusterRuntime:
                 out[nb] = False
         return out
 
-    def pick_target(self, failing: int) -> Optional[int]:
+    def pick_target(self, failing: int, require_free: bool = False) -> Optional[int]:
         """Prefer a healthy spare; else a healthy adjacent host that is not
-        itself predicted to fail."""
+        itself predicted to fail. Blacklisted hosts are never chosen.
+
+        With ``require_free`` the occupied fallbacks are skipped entirely
+        (the scenario engine's no-co-host policy); by default an occupied
+        adjacent core remains a legal last resort — the paper migrates
+        onto busy neighbours."""
+
+        def ok(hid: int) -> bool:
+            return hid not in self.blacklist and self.healthy(hid)
+
+        def free(hid: int) -> bool:
+            return self.hosts[hid].shard is None
+
         for s in self.spares:
-            if self.healthy(s) and self.hosts[s].shard is None:
+            if ok(s) and free(s):
                 return s
         preds = self.neighbour_predictions(failing)
         for nb, doomed in preds.items():
-            if not doomed and self.healthy(nb):
+            if not doomed and ok(nb) and (free(nb) or not require_free):
                 return nb
         for hid, h in self.hosts.items():
-            if hid != failing and self.healthy(hid):
+            if hid != failing and ok(hid) and free(hid):
                 return hid
+        if not require_free:
+            for hid, h in self.hosts.items():
+                if hid != failing and ok(hid):
+                    return hid
         return None
 
+    # --- scenario-engine hooks: blacklisting & spare re-provisioning ------
+    def fail(self, hid: int, permanent: bool = False):
+        """Mark a host failed; optionally bar it from re-provisioning."""
+        self.heartbeats.mark_failed(hid)
+        if permanent:
+            self.blacklist.add(hid)
+        if hid in self.spares:
+            self.spares.remove(hid)
+
+    def provision_spare(self, hid: int) -> bool:
+        """Return a repaired host to the spare pool (unless blacklisted)."""
+        if hid in self.blacklist:
+            return False
+        self.heartbeats.revive(hid)
+        h = self.hosts[hid]
+        h.shard = None
+        h.owner = None
+        h.is_spare = True
+        if hid not in self.spares:
+            self.spares.append(hid)
+        return True
+
+    def available_targets(self) -> List[int]:
+        """Healthy, un-blacklisted, unoccupied hosts (capacity headroom)."""
+        return [
+            hid
+            for hid, h in self.hosts.items()
+            if hid not in self.blacklist and self.healthy(hid) and h.shard is None
+        ]
+
     def occupy(self, hid: int, shard, owner: str):
+        """Place `shard` on `hid`. NOTE: re-occupying a busy host replaces
+        its shard — the paper's migration target may be an adjacent core
+        that is already running a sub-job (co-hosting), so this is legal at
+        this layer; callers that must not co-host (e.g. the scenario
+        engine) pick a free target first (see available_targets)."""
         h = self.hosts[hid]
         h.shard = shard
         h.owner = owner

@@ -268,3 +268,96 @@ def strategy_rows(
 def fmt_hms(s: float) -> str:
     s = int(round(s))
     return f"{s//3600:02d}:{(s%3600)//60:02d}:{s%60:02d}"
+
+
+# ------------------------------------------------------------------------
+# Scenario-engine integration: any registered scenario can be priced here.
+# Closed-form-able specs (the paper's Tables 1-2 patterns) go through the
+# EXACT same `strategy_rows` arithmetic as the seed simulator — bit-for-bit
+# identical totals; everything else is executed by the event-driven
+# CampaignEngine (repro.scenarios.engine).
+# ------------------------------------------------------------------------
+# canonical strategy lists — the engine derives its APPROACHES from these
+# (sim cannot import engine at module level: engine imports sim eagerly)
+CHECKPOINT_STRATEGIES = ("central_single", "central_multi", "decentral")
+PROACTIVE_STRATEGIES = ("agent", "core", "hybrid")
+ALL_STRATEGIES = CHECKPOINT_STRATEGIES + PROACTIVE_STRATEGIES
+
+
+def scenario_totals(
+    scenario,
+    strategies=ALL_STRATEGIES,
+    micro: Optional[MicroCosts] = None,
+    profile_name: str = "placentia",
+) -> Dict[str, Dict]:
+    """Total execution time of a scenario under each FT strategy.
+
+    `scenario` is a ScenarioSpec or a registered scenario name. Returns
+    {strategy: {"total_s", "source", "survived", ...}} where source is
+    "closed_form" for the paper-reducible specs and "engine" otherwise."""
+    from repro.scenarios import registry  # lazy: avoid import cycle
+    from repro.scenarios.engine import CampaignEngine
+    from repro.scenarios.spec import ScenarioSpec
+
+    spec: ScenarioSpec = registry.get(scenario) if isinstance(scenario, str) else scenario
+    micro = micro or measure_micro(profile_name, n_nodes=spec.n_nodes)
+    out: Dict[str, Dict] = {}
+
+    proc = next(
+        (p for p in spec.processes if p.kind in ("periodic", "random")), None
+    )
+    per_window = int(proc.params.get("per_window", 1)) if proc else 1
+    # the published tables only price 1 failure/window (both kinds) and 5
+    # random failures/window; anything else has no exact closed form ->
+    # execute through the engine
+    closed_form_ok = (
+        spec.closed_form in ("periodic", "random")
+        and len(spec.processes) == 1  # extra processes have no table column
+        and proc is not None
+        and proc.kind == spec.closed_form  # flag must describe the process
+        and "period_s" not in proc.params  # per-process period override:
+        #   honoured by events() but invisible to strategy_rows
+        and (per_window == 1 or (per_window == 5 and spec.closed_form == "random"))
+    )
+
+    if closed_form_ok:
+        offset_min = (
+            proc.params.get("offset_s", 900.0) / 60.0
+            if spec.closed_form == "periodic"
+            else None
+        )
+        rows = strategy_rows(
+            spec.horizon_s / 3600.0,
+            [spec.period_s / 3600.0],
+            profile_name=profile_name,
+            n_nodes=spec.n_nodes,
+            micro=micro,
+            periodic_offset_min=offset_min,
+        )
+        for r in rows:
+            if r.strategy not in strategies:
+                continue
+            if spec.closed_form == "periodic":
+                total = r.exec_1periodic_s
+            elif per_window == 5:
+                total = r.exec_5random_s
+            else:
+                total = r.exec_1random_s
+            out[r.strategy] = {
+                "total_s": float(total),
+                "source": "closed_form",
+                "survived": True,
+            }
+        return out
+
+    for strat in strategies:
+        res = CampaignEngine(spec, approach=strat, profile=profile_name, micro=micro).run()
+        out[strat] = {
+            "total_s": res.total_s,
+            "source": "engine",
+            "survived": res.survived,
+            "failed_at_s": res.failed_at_s,
+            "n_events": res.n_events,
+            "n_migrations": res.n_migrations,
+        }
+    return out

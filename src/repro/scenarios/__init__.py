@@ -1,0 +1,25 @@
+"""Scenario engine: declarative multi-failure campaigns + vectorised
+Monte-Carlo trials over the closed-form accounting model.
+
+    from repro.scenarios import registry
+    from repro.scenarios.engine import CampaignEngine
+
+    spec = registry.get("rack_outage")
+    result = CampaignEngine(spec, approach="hybrid").run()
+"""
+from repro.scenarios import registry
+from repro.scenarios.engine import APPROACHES, CampaignEngine, CampaignResult
+from repro.scenarios.montecarlo import MCParams, mc_totals, python_loop_baseline
+from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec
+
+__all__ = [
+    "APPROACHES",
+    "CampaignEngine",
+    "CampaignResult",
+    "FailureProcessSpec",
+    "MCParams",
+    "ScenarioSpec",
+    "mc_totals",
+    "python_loop_baseline",
+    "registry",
+]

@@ -1,0 +1,202 @@
+"""Scenario registry: named, versioned failure campaigns.
+
+The paper's two evaluation settings are registered first —
+``table1_periodic`` / ``table1_random`` (one-hour job, Placentia) and
+``table2_random`` (five-hour genome job) — with ``closed_form`` set so
+``core/sim.py`` reproduces the published tables bit-for-bit. The remaining
+families are the multi-failure refinements the paper leaves to future work;
+they run through the event-driven :class:`CampaignEngine`.
+
+Register your own with :func:`register` (callables returning a
+:class:`ScenarioSpec`, so every ``get`` hands back a fresh spec).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec
+
+_REGISTRY: Dict[str, Callable[[], ScenarioSpec]] = {}
+
+
+def register(name: str, factory: Callable[[], ScenarioSpec], overwrite: bool = False):
+    if name in _REGISTRY and not overwrite:
+        raise KeyError(f"scenario {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def get(name: str) -> ScenarioSpec:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(_REGISTRY)}") from None
+    return factory()  # outside the try: a factory's own KeyError propagates as-is
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------- paper ---
+def _table1_periodic() -> ScenarioSpec:
+    """Table 1: 1 h job, checkpoint every hour, one periodic failure 15 min
+    after the checkpoint (Placentia, 4 nodes)."""
+    return ScenarioSpec(
+        name="table1_periodic",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("periodic", {"offset_s": 900.0})],
+        closed_form="periodic",
+        description="paper Table 1, periodic failure at minute 15",
+    )
+
+
+def _table1_random() -> ScenarioSpec:
+    """Table 1: 1 h job, one random failure uniform in the hour."""
+    return ScenarioSpec(
+        name="table1_random",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("random", {})],
+        closed_form="random",
+        description="paper Table 1, random failure within the window",
+    )
+
+
+def _table2_random() -> ScenarioSpec:
+    """Table 2: 5 h genome job, checkpoint hourly, one random failure per
+    window (offset pattern 14 min for the periodic variant)."""
+    return ScenarioSpec(
+        name="table2_random",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=5 * 3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("random", {})],
+        closed_form="random",
+        description="paper Table 2, five-hour job, hourly windows",
+    )
+
+
+# ------------------------------------------------- beyond-paper families ---
+def _rack_outage() -> ScenarioSpec:
+    """Correlated rack-level outage: both nodes of rack 0 fail within a
+    minute of each other mid-window (shared PSU/cooling)."""
+    return ScenarioSpec(
+        name="rack_outage",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=2 * 3600.0,
+        period_s=3600.0,
+        racks={0: 0, 1: 0, 2: 1, 3: 1},
+        processes=[FailureProcessSpec("rack", {"rack": 0, "t": 1800.0, "spread_s": 60.0})],
+        repair_s=1800.0,
+        description="correlated rack outage, 2 nodes within 60 s",
+    )
+
+
+def _cascade_spare() -> ScenarioSpec:
+    """Failure of the spare: the host the sub-job migrates to fails two
+    minutes later, twice over (depth 2 — needs three fresh targets)."""
+    return ScenarioSpec(
+        name="cascade_spare",
+        n_nodes=4,
+        n_spares=3,
+        horizon_s=2 * 3600.0,
+        period_s=3600.0,
+        processes=[
+            FailureProcessSpec(
+                "cascade", {"node": 1, "t": 1200.0, "delay_s": 120.0, "depth": 2}
+            )
+        ],
+        repair_s=3600.0,
+        description="cascading failure chasing the migrated sub-job",
+    )
+
+
+def _flaky_node() -> ScenarioSpec:
+    """Repeat offender: node 2 fails every 30 min; after max_strikes=2 it is
+    blacklisted and its repairs stop mattering."""
+    return ScenarioSpec(
+        name="flaky_node",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=3 * 3600.0,
+        period_s=3600.0,
+        processes=[
+            FailureProcessSpec("flaky", {"node": 2, "every_s": 1800.0, "first_t": 900.0})
+        ],
+        repair_s=600.0,
+        max_strikes=2,
+        description="flaky repeat-offender node, blacklisted after 2 strikes",
+    )
+
+
+def _spare_exhaustion() -> ScenarioSpec:
+    """Burst larger than the spare pool with no repair: the pool drains and
+    the campaign is lost part-way (survived=False)."""
+    return ScenarioSpec(
+        name="spare_exhaustion",
+        n_nodes=4,
+        n_spares=1,
+        horizon_s=2 * 3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("burst", {"t": 2700.0, "k": 3})],
+        repair_s=None,
+        description="3-node burst against a 1-spare pool, no repair",
+    )
+
+
+def _checkpoint_storm() -> ScenarioSpec:
+    """Failures landing inside checkpoint creation: the in-flight checkpoint
+    is invalidated, so reactive policies lose a full extra window."""
+    return ScenarioSpec(
+        name="checkpoint_storm",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=3 * 3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("ckpt_window", {"offset_s": 5.0})],
+        repair_s=1800.0,
+        description="every checkpoint cut is interrupted by a failure",
+    )
+
+
+def _multi_window_storm() -> ScenarioSpec:
+    """Compound campaign: random per-window failures + a rack outage + a
+    flaky node, simultaneously (the 'as many scenarios as you can imagine'
+    stress case)."""
+    return ScenarioSpec(
+        name="multi_window_storm",
+        n_nodes=6,
+        n_spares=3,
+        horizon_s=3 * 3600.0,
+        period_s=3600.0,
+        racks={0: 0, 1: 0, 2: 1, 3: 1, 4: 2, 5: 2},
+        processes=[
+            FailureProcessSpec("random", {}),
+            FailureProcessSpec("rack", {"rack": 1, "t": 5400.0, "spread_s": 45.0}),
+            FailureProcessSpec("flaky", {"node": 0, "every_s": 2700.0}),
+        ],
+        repair_s=1200.0,
+        max_strikes=3,
+        description="random + rack + flaky processes composed over 3 h",
+    )
+
+
+for _f in (
+    _table1_periodic,
+    _table1_random,
+    _table2_random,
+    _rack_outage,
+    _cascade_spare,
+    _flaky_node,
+    _spare_exhaustion,
+    _checkpoint_storm,
+    _multi_window_storm,
+):
+    register(_f().name, _f)

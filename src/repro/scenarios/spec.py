@@ -1,0 +1,245 @@
+"""Declarative scenario specs: a small dataclass/dict DSL for multi-failure
+campaigns.
+
+The paper evaluates exactly two single-node failure patterns (periodic and
+random, Tables 1-2) and flags multi-failure refinements as future work.
+Real clusters fail in correlated, cascading and repeated ways (Treaster's
+survey; Mulone et al. 2407.05337), so a scenario here is a *composition of
+failure processes* over a cluster layout:
+
+    ScenarioSpec
+      ├─ layout: n_nodes, n_spares, racks, checkpoint period, horizon
+      └─ processes: [FailureProcessSpec, ...]   (merged into one stream)
+
+Process kinds
+-------------
+  periodic        paper Table 1/2 periodic (offset after each window start)
+  random          paper Table 1/2 random (uniform within each window)
+  burst           k simultaneous failures on distinct nodes at time t
+  rack            correlated rack-level outage: every node of one rack fails
+                  within `spread_s` of the outage start
+  cascade         a failure whose repair target also fails `delay_s` later
+                  ("failure of the spare"), down to `depth` levels
+  flaky           one repeat-offender node failing every `every_s`
+  ckpt_window     failures timed to land *inside* checkpoint creation
+                  (at k*period + epsilon)
+
+Every process emits plain :class:`repro.core.failure.FailureEvent` records —
+the same event-stream interface the paper's :class:`FailureModel`
+implements — so the engine, the closed-form accountant in ``core/sim.py``
+and the Monte-Carlo layer all consume any scenario interchangeably.
+
+Specs round-trip through dicts (``to_dict``/``from_dict``) so campaigns can
+be written as JSON and shipped to the benchmark runner.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.failure import (
+    PREDICTABLE_FRACTION,
+    FailureEvent,
+    FailureModel,
+)
+
+PROCESS_KINDS = (
+    "periodic",
+    "random",
+    "burst",
+    "rack",
+    "cascade",
+    "flaky",
+    "ckpt_window",
+)
+
+
+@dataclass(frozen=True)
+class FailureProcessSpec:
+    kind: str
+    params: Dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in PROCESS_KINDS:
+            raise ValueError(f"unknown process kind {self.kind!r}; one of {PROCESS_KINDS}")
+
+
+@dataclass
+class ScenarioSpec:
+    name: str
+    n_nodes: int
+    horizon_s: float
+    n_spares: int = 2
+    period_s: float = 3600.0  # checkpoint interval == failure-window length
+    processes: List[FailureProcessSpec] = field(default_factory=list)
+    racks: Optional[Dict[int, int]] = None  # node -> rack id
+    repair_s: Optional[float] = None  # None: failed nodes never return
+    max_strikes: int = 3  # failures before a node is blacklisted for good
+    predictable_fraction: float = PREDICTABLE_FRACTION
+    seed: int = 0
+    description: str = ""
+    # set for the paper's two patterns so sim.py can take the exact
+    # closed-form path (Tables 1-2 reproduce bit-for-bit):
+    closed_form: Optional[str] = None  # "periodic" | "random" | None
+
+    # ------------------------------------------------------------------ DSL
+    def to_dict(self) -> Dict:
+        return asdict(self)  # recurses into the FailureProcessSpec list
+
+    @staticmethod
+    def from_dict(d: Dict) -> "ScenarioSpec":
+        d = dict(d)
+        d["processes"] = [
+            p if isinstance(p, FailureProcessSpec) else FailureProcessSpec(**p)
+            for p in d.get("processes", [])
+        ]
+        racks = d.get("racks")
+        if racks is not None:
+            d["racks"] = {int(k): int(v) for k, v in racks.items()}
+        return ScenarioSpec(**d)
+
+    def effective_racks(self) -> Optional[Dict[int, int]]:
+        """The rack layout both event generation AND the runtime's
+        correlated telemetry use. When a `rack` process exists but no
+        layout was given, a default pairwise layout is synthesised — from
+        ONE place, so the engine's HeartbeatService sees the same racks the
+        events were drawn from."""
+        if self.racks is not None:
+            return self.racks
+        if any(p.kind == "rack" for p in self.processes):
+            return {i: i % 2 for i in range(self.n_nodes)}
+        return None
+
+    # ------------------------------------------------------- event stream
+    def events(self, seed: Optional[int] = None) -> List[FailureEvent]:
+        """Generate the merged, time-ordered failure stream for one trial."""
+        base_seed = self.seed if seed is None else seed
+        out: List[FailureEvent] = []
+        kind_occurrence: Dict[str, int] = {}
+        for i, proc in enumerate(self.processes):
+            rng = np.random.default_rng((base_seed, i))
+            occ = kind_occurrence.get(proc.kind, 0)
+            kind_occurrence[proc.kind] = occ + 1
+            out.extend(self._gen(proc, rng, base_seed, occ))
+        # uniform horizon clip for every process kind (FailureModel clips
+        # internally; burst/rack/cascade place events at explicit times)
+        out = [e for e in out if e.t < self.horizon_s]
+        return sorted(out, key=lambda e: e.t)
+
+    def _gen(
+        self, proc: FailureProcessSpec, rng: np.random.Generator, base_seed: int, idx: int
+    ) -> List[FailureEvent]:
+        p = proc.params
+        if proc.kind in ("periodic", "random"):
+            # delegate to the paper's FailureModel so the stream is
+            # bit-for-bit the seed simulator's (same rng draw order). `idx`
+            # counts prior processes of the SAME kind: the first periodic/
+            # random process uses base_seed directly wherever it sits in
+            # the list (paper exactness); repeats get a derived seed so
+            # composing two `random` processes doubles the failures instead
+            # of emitting the identical stream twice.
+            fm = FailureModel(
+                kind=proc.kind,
+                n_nodes=self.n_nodes,
+                horizon_s=self.horizon_s,
+                period_s=p.get("period_s", self.period_s),
+                offset_s=p.get("offset_s", 900.0),
+                per_window=p.get("per_window", 1),
+                seed=p.get("seed", base_seed + 1_000_003 * idx),
+                predictable_fraction=p.get(
+                    "predictable_fraction", self.predictable_fraction
+                ),
+            )
+            return fm.events()
+
+        if proc.kind == "burst":
+            t = float(p.get("t", self.period_s / 2))
+            k = int(p.get("k", min(3, self.n_nodes)))
+            nodes = rng.choice(self.n_nodes, size=min(k, self.n_nodes), replace=False)
+            return [
+                FailureEvent(
+                    t=t + 1e-3 * j,  # strictly ordered, effectively simultaneous
+                    node=int(n),
+                    predictable=bool(rng.random() < self.predictable_fraction),
+                    cause="burst",
+                )
+                for j, n in enumerate(nodes)
+            ]
+
+        if proc.kind == "rack":
+            racks = self.effective_racks()
+            rack_id = p.get("rack")
+            if rack_id is None:
+                rack_id = int(rng.choice(sorted(set(racks.values()))))
+            members = [n for n, r in racks.items() if r == rack_id and n < self.n_nodes]
+            t0 = float(p.get("t", self.period_s / 2))
+            spread = float(p.get("spread_s", 60.0))
+            return [
+                FailureEvent(
+                    t=t0 + float(rng.uniform(0.0, spread)),
+                    node=int(n),
+                    predictable=bool(rng.random() < self.predictable_fraction),
+                    cause="rack",
+                    rack=int(rack_id),
+                )
+                for n in members
+            ]
+
+        if proc.kind == "cascade":
+            t = float(p.get("t", self.period_s / 2))
+            node = int(p.get("node", rng.integers(0, self.n_nodes)))
+            return [
+                FailureEvent(
+                    t=t,
+                    node=node,
+                    predictable=bool(
+                        p.get("predictable", rng.random() < self.predictable_fraction)
+                    ),
+                    cause="cascade",
+                    cascade={
+                        "delay_s": float(p.get("delay_s", 120.0)),
+                        "depth": int(p.get("depth", 1)),
+                    },
+                )
+            ]
+
+        if proc.kind == "flaky":
+            node = int(p.get("node", rng.integers(0, self.n_nodes)))
+            every = float(p.get("every_s", self.period_s / 2))
+            if every <= 0:
+                raise ValueError(f"flaky every_s must be > 0, got {every}")
+            t = float(p.get("first_t", every))
+            out = []
+            while t < self.horizon_s:
+                out.append(
+                    FailureEvent(
+                        t=t,
+                        node=node,
+                        predictable=bool(rng.random() < self.predictable_fraction),
+                        cause="flaky",
+                    )
+                )
+                t += every
+            return out
+
+        if proc.kind == "ckpt_window":
+            # fires while the checkpoint at k*period is being created
+            eps = float(p.get("offset_s", 5.0))
+            which = p.get("windows")  # list of window indices, default: all
+            n_ck = int(np.floor(self.horizon_s / self.period_s))
+            windows = which if which is not None else list(range(1, n_ck + 1))
+            return [
+                FailureEvent(
+                    t=k * self.period_s + eps,
+                    node=int(rng.integers(0, self.n_nodes)),
+                    predictable=False,  # mid-checkpoint failures strike blind
+                    cause="ckpt_window",
+                    during_checkpoint=True,
+                )
+                for k in windows
+                if k * self.period_s + eps < self.horizon_s
+            ]
+
+        raise ValueError(proc.kind)  # unreachable: __post_init__ validates

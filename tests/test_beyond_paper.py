@@ -10,6 +10,8 @@ from repro.core.speculative import SpeculativeEgress
 from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
 from repro.utils.tree import tree_hash
 
+pytestmark = pytest.mark.slow  # long-running integration; tier-1 deselects via pytest.ini
+
 
 def _state(seed, n=4096):
     rng = np.random.default_rng(seed)

@@ -6,6 +6,10 @@ import json
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # long-running integration; tier-1 deselects via pytest.ini
+
 
 def test_dryrun_cell_compiles_and_reports(tmp_path):
     out = tmp_path / "cell.json"

@@ -1,0 +1,86 @@
+"""FailureModel edge cases surfaced by the event-stream refactor:
+per_window > 1, zero/short horizon, kind="none", and seed determinism."""
+import numpy as np
+import pytest
+
+from repro.core.failure import (
+    PREDICTABLE_FRACTION,
+    EventStream,
+    FailureEvent,
+    FailureModel,
+    merge_streams,
+)
+
+
+def _fm(**kw):
+    base = dict(kind="random", n_nodes=4, horizon_s=3600.0, period_s=3600.0, seed=3)
+    base.update(kw)
+    return FailureModel(**base)
+
+
+def test_per_window_gt_one_counts_and_ordering():
+    fm = _fm(kind="random", per_window=5, horizon_s=2 * 3600.0)
+    evs = fm.events()
+    assert len(evs) == 10  # 5 per window x 2 windows (uniform never lands >= horizon)
+    assert all(evs[i].t <= evs[i + 1].t for i in range(len(evs) - 1))
+    assert all(0.0 <= e.t < fm.horizon_s for e in evs)
+
+
+def test_per_window_gt_one_periodic_stays_within_window():
+    fm = _fm(kind="periodic", per_window=5, offset_s=300.0)
+    evs = fm.events()
+    assert len(evs) == 5
+    # k-th failure at offset + k * (period/per_window) * 0.9, all inside the hour
+    expect = [300.0 + k * (3600.0 / 5) * 0.9 for k in range(5)]
+    assert [e.t for e in evs] == pytest.approx(sorted(expect))
+
+
+def test_zero_horizon_yields_no_events():
+    assert _fm(horizon_s=0.0).events() == []
+
+
+def test_short_horizon_truncates_partial_window():
+    # horizon shorter than the periodic offset: the event would land at
+    # t=900 >= horizon=600 and must be dropped
+    assert _fm(kind="periodic", horizon_s=600.0, offset_s=900.0).events() == []
+    # random events beyond the horizon are dropped too
+    evs = _fm(kind="random", horizon_s=1800.0).events()
+    assert all(e.t < 1800.0 for e in evs)
+
+
+def test_kind_none_is_empty_regardless_of_params():
+    assert _fm(kind="none", per_window=7, horizon_s=1e6).events() == []
+
+
+def test_identical_seeds_are_deterministic():
+    a = _fm(seed=42, per_window=3, horizon_s=4 * 3600.0).events()
+    b = _fm(seed=42, per_window=3, horizon_s=4 * 3600.0).events()
+    assert a == b  # FailureEvent is a frozen dataclass -> value equality
+    c = _fm(seed=43, per_window=3, horizon_s=4 * 3600.0).events()
+    assert a != c
+
+
+def test_nodes_and_predictability_in_range():
+    evs = _fm(seed=7, per_window=4, horizon_s=8 * 3600.0).events()
+    assert {e.node for e in evs} <= set(range(4))
+    frac = np.mean([e.predictable for e in evs])
+    assert 0.0 <= frac <= 1.0  # ~PREDICTABLE_FRACTION, loose: small sample
+    assert all(e.lead_s > 0 for e in evs)
+
+
+def test_failure_model_satisfies_event_stream_protocol():
+    assert isinstance(_fm(), EventStream)
+
+
+def test_merge_streams_time_orders_across_processes():
+    a = _fm(kind="periodic", seed=1, offset_s=900.0)
+    b = _fm(kind="random", seed=2)
+    merged = merge_streams(a, b)
+    assert len(merged) == len(a.events()) + len(b.events())
+    assert all(merged[i].t <= merged[i + 1].t for i in range(len(merged) - 1))
+
+
+def test_event_metadata_defaults_keep_paper_semantics():
+    e = FailureEvent(t=1.0, node=0, predictable=True)
+    assert e.cause == "independent" and e.rack is None and not e.during_checkpoint
+    assert e.shifted(5.0).t == 6.0

@@ -9,6 +9,8 @@ from repro.configs import all_archs, get_arch
 from repro.models import build_model
 from repro.train.step import make_train_step
 
+pytestmark = pytest.mark.slow  # long-running integration; tier-1 deselects via pytest.ini
+
 ARCHS = sorted(all_archs())
 
 

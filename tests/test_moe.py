@@ -11,6 +11,8 @@ from repro.configs import get_arch
 from repro.models.moe import moe_apply, moe_init, moe_ref
 from repro.utils.tree import split_params
 
+pytestmark = pytest.mark.slow  # long-running integration; tier-1 deselects via pytest.ini
+
 
 def _cfg(E=4, k=2, cf=None):
     base = get_arch("olmoe-1b-7b").reduced()

@@ -8,8 +8,11 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.sharding.pipeline import pipeline_apply
+
+pytestmark = pytest.mark.slow  # long-running integration; tier-1 deselects via pytest.ini
 
 
 def _layer(pl_, x):

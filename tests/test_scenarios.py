@@ -1,0 +1,468 @@
+"""Scenario engine: spec DSL round-trip, registry, campaign engine
+semantics (blacklisting, re-provisioning, cascades, exhaustion), paper
+exactness through sim.scenario_totals, and the vectorised Monte-Carlo
+layer's agreement with the Python-loop baseline."""
+import numpy as np
+import pytest
+
+from repro.core.sim import measure_micro, scenario_totals, strategy_rows
+from repro.scenarios import registry
+from repro.scenarios.engine import CampaignEngine
+from repro.scenarios.montecarlo import (
+    MCParams,
+    mc_totals,
+    params_from_scenario,
+    python_loop_baseline,
+)
+from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec
+
+
+@pytest.fixture(scope="module")
+def micro():
+    return measure_micro("placentia", n_nodes=4)
+
+
+# ----------------------------------------------------------------- spec ---
+def test_spec_dict_roundtrip():
+    spec = registry.get("multi_window_storm")
+    again = ScenarioSpec.from_dict(spec.to_dict())
+    assert again == spec
+    assert again.events(7) == spec.events(7)
+
+
+def test_unknown_process_kind_rejected():
+    with pytest.raises(ValueError):
+        FailureProcessSpec("meteor_strike", {})
+
+
+def test_spec_events_deterministic_per_seed():
+    spec = registry.get("multi_window_storm")
+    assert spec.events(1) == spec.events(1)
+    assert spec.events(1) != spec.events(2)
+
+
+def test_paper_spec_stream_matches_failure_model_exactly():
+    """The registered paper scenario delegates to FailureModel: identical
+    event stream (same rng draw order) as the seed implementation."""
+    from repro.core.failure import FailureModel
+
+    spec = registry.get("table1_random")
+    fm = FailureModel(kind="random", n_nodes=4, horizon_s=3600.0, seed=spec.seed)
+    assert spec.events() == fm.events()
+
+
+def test_same_kind_processes_compose_with_distinct_streams():
+    """Two composed `random` processes must contribute distinct failures,
+    not the identical stream twice (per-process seed derivation)."""
+    spec = ScenarioSpec(
+        name="double_random",
+        n_nodes=4,
+        horizon_s=2 * 3600.0,
+        processes=[FailureProcessSpec("random", {}), FailureProcessSpec("random", {})],
+        seed=5,
+    )
+    evs = spec.events()
+    assert len(evs) == 4  # 1/window/process x 2 windows x 2 processes
+    assert len({(e.t, e.node) for e in evs}) == 4  # no duplicated events
+
+
+def test_paper_kind_not_first_still_matches_failure_model():
+    """Seed derivation counts same-kind occurrences, so the FIRST random
+    process keeps FailureModel exactness even behind another kind."""
+    from repro.core.failure import FailureModel
+
+    spec = ScenarioSpec(
+        name="rack_then_random",
+        n_nodes=4,
+        horizon_s=3600.0,
+        processes=[
+            FailureProcessSpec("rack", {"rack": 0, "t": 600.0}),
+            FailureProcessSpec("random", {}),
+        ],
+        seed=9,
+    )
+    fm_events = FailureModel(kind="random", n_nodes=4, horizon_s=3600.0, seed=9).events()
+    random_events = [e for e in spec.events() if e.cause == "independent"]
+    assert random_events == fm_events
+
+
+def test_all_process_kinds_clip_to_horizon():
+    spec = ScenarioSpec(
+        name="past_horizon",
+        n_nodes=4,
+        horizon_s=3600.0,
+        processes=[
+            FailureProcessSpec("burst", {"t": 5000.0, "k": 2}),
+            FailureProcessSpec("rack", {"rack": 0, "t": 3590.0, "spread_s": 60.0}),
+            FailureProcessSpec("cascade", {"node": 0, "t": 9999.0}),
+        ],
+    )
+    assert all(e.t < 3600.0 for e in spec.events())
+
+
+def test_rack_process_fails_whole_rack_within_spread():
+    spec = registry.get("rack_outage")
+    evs = spec.events()
+    assert {e.node for e in evs} == {0, 1}  # rack 0 members
+    assert all(e.cause == "rack" and e.rack == 0 for e in evs)
+    ts = [e.t for e in evs]
+    assert max(ts) - min(ts) <= 60.0
+
+
+# ------------------------------------------------------------- registry ---
+def test_registry_has_paper_and_new_families():
+    have = registry.names()
+    for required in (
+        "table1_periodic",
+        "table2_random",
+        "rack_outage",
+        "cascade_spare",
+        "flaky_node",
+        "spare_exhaustion",
+        "checkpoint_storm",
+    ):
+        assert required in have
+    with pytest.raises(KeyError):
+        registry.get("nope")
+    with pytest.raises(KeyError):
+        registry.register("rack_outage", lambda: None)
+
+
+# --------------------------------------------------------------- engine ---
+def test_engine_runs_all_families_all_approaches(micro):
+    """>= 4 new scenario families end-to-end for agent/core/hybrid."""
+    families = ["rack_outage", "cascade_spare", "flaky_node", "checkpoint_storm"]
+    for name in families:
+        spec = registry.get(name)
+        for approach in ("agent", "core", "hybrid"):
+            res = CampaignEngine(spec, approach, micro=micro).run()
+            assert res.survived, (name, approach)
+            assert res.total_s > spec.horizon_s
+            assert res.n_migrations >= 1
+
+
+def test_engine_proactive_beats_checkpointing_on_rack_outage(micro):
+    spec = registry.get("rack_outage")
+    core = CampaignEngine(spec, "core", micro=micro).run()
+    ck = CampaignEngine(spec, "central_single", micro=micro).run()
+    assert core.survived and ck.survived
+    assert core.total_s < ck.total_s
+
+
+def test_spare_exhaustion_strands_the_job(micro):
+    spec = registry.get("spare_exhaustion")
+    res = CampaignEngine(spec, "core", micro=micro).run()
+    assert not res.survived
+    assert res.total_s is None
+    assert res.failed_at_s == pytest.approx(2700.0, abs=1.0)
+
+
+def test_cascade_chases_migrated_subjob(micro):
+    spec = registry.get("cascade_spare")
+    res = CampaignEngine(spec, "core", micro=micro).run()
+    assert res.survived
+    assert res.n_migrations == 3  # initial + two cascade levels
+    causes = [e["cause"] for e in res.events]
+    assert causes.count("cascade") == 3
+
+
+def test_flaky_node_blacklisted_after_max_strikes(micro):
+    spec = registry.get("flaky_node")
+    res = CampaignEngine(spec, "core", micro=micro).run()
+    assert res.survived
+    assert res.n_blacklisted == 1
+    # after blacklisting, the repeat offender's later failures coalesce
+    assert res.n_events >= spec.max_strikes
+
+
+def test_repair_reprovisions_spares(micro):
+    spec = registry.get("rack_outage")  # repair_s=1800 within 2 h horizon
+    res = CampaignEngine(spec, "core", micro=micro).run()
+    assert res.n_reprovisioned == 2
+
+
+def test_checkpoint_storm_punishes_reactive_policies(micro):
+    """A failure during checkpoint creation costs reactive policies a full
+    extra window (restore from the previous checkpoint)."""
+    spec = registry.get("checkpoint_storm")
+    ck = CampaignEngine(spec, "central_single", micro=micro).run()
+    core = CampaignEngine(spec, "core", micro=micro).run()
+    # reactive loses > period per event; proactive only the few seconds in
+    assert ck.lost_s > 2 * spec.period_s
+    assert core.lost_s < 60.0
+
+
+def test_engine_reports_handled_count(micro):
+    res = CampaignEngine(registry.get("rack_outage"), "core", micro=micro).run()
+    assert res.n_handled == res.n_migrations == 2
+
+
+def test_hybrid_bills_the_negotiated_mechanism(micro):
+    """With Z > 10 on the failing node and a small payload, Rules 1-3 pick
+    AGENT migration — the engine must bill agent costs, not core's."""
+    spec = ScenarioSpec(
+        name="hub_failure",
+        n_nodes=12,  # star combiner has Z = 11 > Z_THRESHOLD
+        n_spares=2,
+        horizon_s=3600.0,
+        processes=[
+            FailureProcessSpec("cascade", {"node": 11, "t": 600.0, "depth": 0, "predictable": True})
+        ],
+    )
+    res = CampaignEngine(spec, "hybrid", micro=micro).run()
+    assert res.survived and res.n_migrations == 1
+    assert res.reinstate_s == pytest.approx(micro.predict_s + micro.agent_reinstate_s)
+    assert res.overhead_s == pytest.approx(micro.agent_overhead_s)
+
+
+def test_engine_rejects_unknown_approach():
+    with pytest.raises(ValueError):
+        CampaignEngine(registry.get("rack_outage"), "voodoo")
+
+
+# --------------------------------------------- sim.py scenario wiring -----
+def test_paper_scenarios_reproduce_seed_totals_exactly(micro):
+    """Acceptance: Table 1 periodic + Table 2 random, as registered specs,
+    equal the seed simulator's closed-form totals bit-for-bit."""
+    for name, col in (("table1_periodic", "exec_1periodic_s"), ("table2_random", "exec_1random_s")):
+        spec = registry.get(name)
+        proc = spec.processes[0]
+        offset = proc.params.get("offset_s", 900.0) / 60.0 if proc.kind == "periodic" else None
+        rows = strategy_rows(
+            spec.horizon_s / 3600.0,
+            [spec.period_s / 3600.0],
+            n_nodes=spec.n_nodes,
+            micro=micro,
+            periodic_offset_min=offset,
+        )
+        got = scenario_totals(spec, micro=micro)
+        for r in rows:
+            if r.strategy in got:
+                assert got[r.strategy]["total_s"] == getattr(r, col), (name, r.strategy)
+                assert got[r.strategy]["source"] == "closed_form"
+
+
+def test_scenario_totals_unsupported_per_window_uses_engine(micro):
+    """per_window values the published tables don't price (anything other
+    than 1 or 5) must not be silently mispriced by the closed form."""
+    spec = ScenarioSpec(
+        name="three_per_window",
+        n_nodes=4,
+        horizon_s=2 * 3600.0,
+        processes=[FailureProcessSpec("random", {"per_window": 3})],
+        closed_form="random",
+        repair_s=600.0,
+    )
+    out = scenario_totals(spec, strategies=("central_single",), micro=micro)
+    assert out["central_single"]["source"] == "engine"
+
+
+def test_scenario_totals_periodic_5x_not_mispriced_as_closed_form(micro):
+    """The tables have no 5x-periodic column, so that combination must
+    execute through the engine rather than be billed as one failure."""
+    spec = ScenarioSpec(
+        name="periodic5",
+        n_nodes=4,
+        horizon_s=2 * 3600.0,
+        processes=[FailureProcessSpec("periodic", {"offset_s": 900.0, "per_window": 5})],
+        closed_form="periodic",
+        repair_s=600.0,
+    )
+    out = scenario_totals(spec, strategies=("central_single",), micro=micro)
+    assert out["central_single"]["source"] == "engine"
+
+
+def test_scenario_totals_multi_process_spec_not_closed_form(micro):
+    """Extra processes have no table column: a closed_form spec composed
+    with a rack outage must execute through the engine."""
+    spec = ScenarioSpec(
+        name="random_plus_rack",
+        n_nodes=4,
+        horizon_s=2 * 3600.0,
+        processes=[
+            FailureProcessSpec("random", {}),
+            FailureProcessSpec("rack", {"rack": 0, "t": 1800.0}),
+        ],
+        closed_form="random",
+        repair_s=900.0,
+    )
+    out = scenario_totals(spec, strategies=("central_single",), micro=micro)
+    assert out["central_single"]["source"] == "engine"
+
+
+def test_rack_default_layout_reaches_runtime_telemetry(micro):
+    """A rack process with no explicit layout must hand the SAME synthetic
+    layout to the runtime, so correlated telemetry actually activates."""
+    spec = ScenarioSpec(
+        name="rack_default",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=3600.0,
+        processes=[FailureProcessSpec("rack", {"rack": 0, "t": 600.0})],
+        repair_s=900.0,
+    )
+    assert spec.effective_racks() == {0: 0, 1: 1, 2: 0, 3: 1}
+    eng = CampaignEngine(spec, "core", micro=micro)
+    res = eng.run()
+    assert res.survived
+
+
+def test_flaky_zero_interval_rejected_not_hung():
+    spec = ScenarioSpec(
+        name="bad_flaky",
+        n_nodes=4,
+        horizon_s=3600.0,
+        processes=[FailureProcessSpec("flaky", {"every_s": 0.0})],
+    )
+    with pytest.raises(ValueError, match="every_s"):
+        spec.events()
+
+
+def test_closed_form_flag_must_match_process_kind(micro):
+    """closed_form='periodic' over a rack process must not crash or be
+    priced by the tables — it routes to the engine."""
+    spec = ScenarioSpec(
+        name="mislabelled",
+        n_nodes=4,
+        horizon_s=3600.0,
+        processes=[FailureProcessSpec("rack", {"rack": 0, "t": 600.0})],
+        closed_form="periodic",
+        repair_s=900.0,
+    )
+    out = scenario_totals(spec, strategies=("central_single",), micro=micro)
+    assert out["central_single"]["source"] == "engine"
+
+
+def test_closed_form_rejects_per_process_period_override(micro):
+    spec = ScenarioSpec(
+        name="period_override",
+        n_nodes=4,
+        horizon_s=2 * 3600.0,
+        processes=[FailureProcessSpec("random", {"period_s": 1800.0})],
+        closed_form="random",
+        repair_s=900.0,
+    )
+    out = scenario_totals(spec, strategies=("central_single",), micro=micro)
+    assert out["central_single"]["source"] == "engine"
+
+
+def test_engine_checkpoint_costs_scale_with_period(micro):
+    """2 h windows must price checkpoint reinstate/overhead by the same
+    growth curves the closed form uses (RST_GROWTH/OVH_GROWTH)."""
+    from repro.core.sim import OVH_GROWTH, RST_GROWTH
+
+    def run_with_period(period_s):
+        spec = ScenarioSpec(
+            name=f"p{period_s}",
+            n_nodes=4,
+            n_spares=2,
+            horizon_s=4 * 3600.0,
+            period_s=period_s,
+            processes=[FailureProcessSpec("burst", {"t": 1000.0, "k": 1})],
+            repair_s=900.0,
+        )
+        return CampaignEngine(spec, "central_single", micro=micro).run()
+
+    r1, r2 = run_with_period(3600.0), run_with_period(2 * 3600.0)
+    assert r2.reinstate_s / r1.reinstate_s == pytest.approx(RST_GROWTH[2.0])
+    # overhead includes only the per-failure term here (1 event each)
+    assert r2.overhead_s / r1.overhead_s == pytest.approx(OVH_GROWTH[2.0])
+
+
+def test_registry_factory_keyerror_not_masked():
+    def bad_factory():
+        return {}["missing"]
+
+    registry.register("_bad_factory_test", bad_factory)
+    try:
+        with pytest.raises(KeyError, match="missing"):
+            registry.get("_bad_factory_test")
+    finally:
+        registry._REGISTRY.pop("_bad_factory_test", None)
+
+
+def test_scenario_totals_engine_path(micro):
+    out = scenario_totals("rack_outage", strategies=("core", "central_single"), micro=micro)
+    assert out["core"]["source"] == "engine"
+    assert out["core"]["total_s"] < out["central_single"]["total_s"]
+
+
+# ---------------------------------------------------------- monte-carlo ---
+def test_mc_matches_python_loop_mean():
+    params = MCParams(
+        J_s=5 * 3600.0, period_s=3600.0, per_window=1, reinstate_s=848.0, overhead_s=485.0
+    )
+    mc = mc_totals(params, n_seeds=4000, seed=0)
+    base = python_loop_baseline(params, n_seeds=4000, seed=0)
+    assert mc["mean_s"] == pytest.approx(float(base.mean()), rel=0.01)
+    assert mc["std_s"] == pytest.approx(float(base.std()), rel=0.05)
+    assert mc["p5_s"] < mc["p50_s"] < mc["p95_s"]
+
+
+def test_mc_proactive_is_deterministic():
+    params = MCParams(
+        J_s=3600.0, period_s=3600.0, per_window=1, reinstate_s=300.0,
+        overhead_s=300.0, probe_per_hour_s=5.0, lost_progress=False, lead_s=38.0,
+    )
+    mc = mc_totals(params, n_seeds=100)
+    assert mc["std_s"] == 0.0
+    assert mc["mean_s"] == pytest.approx(3600.0 + 5.0 + 300.0 + 300.0 + 38.0)
+    # deterministic short-circuit: agrees with the loop baseline too
+    base = python_loop_baseline(params, n_seeds=100)
+    assert float(base.mean()) == pytest.approx(mc["mean_s"])
+
+
+def test_params_from_scenario_reduces_table2(micro):
+    spec = registry.get("table2_random")
+    p = params_from_scenario(spec, "central_single", micro)
+    assert p.lost_progress and p.per_window == 1 and p.J_s == 5 * 3600.0
+    assert p.fixed_lost_s is None  # random: stochastic loss
+    p2 = params_from_scenario(spec, "core", micro)
+    assert not p2.lost_progress and p2.lead_s > 0
+
+
+def test_mc_periodic_partial_window_uses_round_like_sim():
+    """sim._totals bills periodic failures once per possibly-partial window
+    (round); MC's deterministic path must count the same way."""
+    params = MCParams(
+        J_s=1.75 * 3600.0, period_s=3600.0, per_window=1,
+        reinstate_s=100.0, overhead_s=50.0, fixed_lost_s=900.0,
+    )
+    mc = mc_totals(params, n_seeds=10)
+    assert mc["mean_s"] == pytest.approx(1.75 * 3600.0 + 2 * (900.0 + 100.0 + 50.0))
+    base = python_loop_baseline(params, n_seeds=10)
+    assert float(base.mean()) == pytest.approx(mc["mean_s"])
+
+
+def test_params_from_scenario_periodic_is_deterministic(micro):
+    """Periodic scenarios lose the fixed checkpoint offset, not a uniform
+    sample — MC must collapse to the closed-form table total."""
+    from repro.core.sim import fmt_hms, strategy_rows
+
+    spec = registry.get("table1_periodic")
+    p = params_from_scenario(spec, "central_single", micro)
+    assert p.fixed_lost_s == 900.0
+    mc = mc_totals(p, n_seeds=50)
+    assert mc["std_s"] == 0.0
+    rows = strategy_rows(1.0, [1.0], micro=micro, periodic_offset_min=15.0)
+    row = next(r for r in rows if r.strategy == "central_single")
+    assert mc["mean_s"] == pytest.approx(row.exec_1periodic_s, abs=1.0)
+    base = python_loop_baseline(p, n_seeds=50)
+    assert float(base.std()) == pytest.approx(0.0, abs=1e-9)
+    assert mc["mean_s"] == pytest.approx(float(base.mean()))
+
+
+def test_correlated_rack_telemetry_drifts():
+    """Heartbeat extension: a healthy node whose rack peer degrades shows
+    elevated thermals/ECC (the predictor's early-warning signal)."""
+    from repro.core.heartbeat import HeartbeatService
+
+    hb = HeartbeatService(4, seed=0, racks={0: 0, 1: 0, 2: 1, 3: 1})
+    hb.mark_degrading(0)
+    temps_peer, temps_other = [], []
+    for _ in range(50):
+        f = hb.tick()
+        temps_peer.append(f[1][3])  # node 1 shares rack 0
+        temps_other.append(f[2][3])  # node 2 in the other rack
+    assert np.mean(temps_peer) > np.mean(temps_other) + 10.0
+    assert hb.rack_stress(1) == 1.0 and hb.rack_stress(2) == 0.0

@@ -14,6 +14,8 @@ from repro.models import build_model
 from repro.train.step import make_train_step
 from repro.utils.tree import tree_hash
 
+pytestmark = pytest.mark.slow  # long-running integration; tier-1 deselects via pytest.ini
+
 
 @pytest.fixture(scope="module")
 def setup():
