@@ -29,10 +29,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import OUT_DIR
-from repro.core.sim import ALL_STRATEGIES, fmt_hms, measure_micro, scenario_totals, strategy_rows
+from repro.core.sim import fmt_hms, measure_micro, scenario_totals, strategy_rows
 from repro.scenarios import mc_totals, python_loop_baseline, registry
 from repro.scenarios.engine import CampaignEngine
 from repro.scenarios.montecarlo import params_from_scenario
+from repro.strategies import names as strategy_names
 
 PAPER_SCENARIOS = ("table1_periodic", "table1_random", "table2_random")
 MIN_SPEEDUP = 10.0
@@ -81,7 +82,7 @@ def run_campaigns(micro, scenarios=None) -> dict:
         if spec.closed_form:
             continue  # priced above, exactly
         per = {}
-        for approach in ALL_STRATEGIES:
+        for approach in strategy_names():  # every registered strategy
             res = CampaignEngine(spec, approach, micro=micro).run()
             d = res.to_dict()
             d["total"] = fmt_hms(res.total_s) if res.total_s is not None else None

@@ -26,6 +26,7 @@ from repro.core.migration import (
     serialize_state,
 )
 from repro.core.runtime import ClusterRuntime
+from repro.strategies.placement import PlacementPolicy
 
 
 @dataclass
@@ -34,6 +35,8 @@ class Agent:
     host: int
     payload: object
     meta: dict = field(default_factory=dict)
+    # target selection is a pluggable policy; None -> the runtime's default
+    placement: Optional[PlacementPolicy] = None
 
     def probe(self, rt: ClusterRuntime) -> bool:
         """Periodically probe the hardware of the current host (Step 4.1)."""
@@ -48,7 +51,7 @@ class Agent:
         re-establish dependencies."""
         old = self.host
         if target is None:
-            target = rt.pick_target(old)
+            target = (self.placement or rt.placement).pick(rt, old)
         assert target is not None, "no healthy target available"
 
         t0 = time.perf_counter()

@@ -124,9 +124,13 @@ class CheckpointStore:
         }
 
 
+# the checkpoint infrastructure variants the paper prices (Tables 1-2)
+CHECKPOINT_KINDS = ("central_single", "central_multi", "decentral")
+
+
 @dataclass
 class CheckpointPolicyCfg:
-    kind: str  # central_single | central_multi | decentral
+    kind: str  # one of CHECKPOINT_KINDS
     period_s: float = 3600.0
     n_servers: int = 1
     asynchronous: bool = False

@@ -17,6 +17,7 @@ from repro.core.cluster import ClusterProfile, get_profile
 from repro.core.heartbeat import HeartbeatService
 from repro.core.migration import DependencyGraph
 from repro.core.predictor import FailurePredictor
+from repro.strategies.placement import PlacementPolicy, get_placement
 
 
 @dataclass
@@ -36,6 +37,7 @@ class ClusterRuntime:
         graph: Optional[DependencyGraph] = None,
         seed: int = 0,
         racks: Optional[Dict[int, int]] = None,
+        placement: str | PlacementPolicy = "nearest-spare",
     ):
         self.profile = get_profile(profile) if isinstance(profile, str) else profile
         self.hosts: Dict[int, VirtualHost] = {
@@ -48,6 +50,8 @@ class ClusterRuntime:
         self.predictor: Optional[FailurePredictor] = None
         self.events: List[dict] = []
         self.blacklist: set = set()  # hosts barred from ever hosting work again
+        self.placement = get_placement(placement)  # the runtime's default policy
+        self.partition: Optional[Dict[int, int]] = None  # host -> component id
 
     # --- landscape knowledge (paper: agent knows its core + vicinity) -----
     def neighbours(self, hid: int) -> List[int]:
@@ -72,35 +76,26 @@ class ClusterRuntime:
         return out
 
     def pick_target(self, failing: int, require_free: bool = False) -> Optional[int]:
-        """Prefer a healthy spare; else a healthy adjacent host that is not
-        itself predicted to fail. Blacklisted hosts are never chosen.
+        """Delegate to the runtime's default :class:`PlacementPolicy`
+        (``nearest-spare`` unless overridden at construction): prefer a
+        healthy spare; else a healthy adjacent host that is not itself
+        predicted to fail. Blacklisted hosts are never chosen.
 
-        With ``require_free`` the occupied fallbacks are skipped entirely
-        (the scenario engine's no-co-host policy); by default an occupied
-        adjacent core remains a legal last resort — the paper migrates
-        onto busy neighbours."""
+        Strategies carry their own injected placement policy and call it
+        directly; this method remains as the runtime-level default."""
+        return self.placement.pick(self, failing, require_free=require_free)
 
-        def ok(hid: int) -> bool:
-            return hid not in self.blacklist and self.healthy(hid)
+    # --- network partitions (partition-aware placement, quorum) -----------
+    def set_partition(self, components: Dict[int, int]):
+        """Split the cluster: heartbeats cross the cut but migrations must
+        not — the ``partition-aware`` placement policy honours this map."""
+        self.partition = dict(components)
 
-        def free(hid: int) -> bool:
-            return self.hosts[hid].shard is None
+    def heal_partition(self):
+        self.partition = None
 
-        for s in self.spares:
-            if ok(s) and free(s):
-                return s
-        preds = self.neighbour_predictions(failing)
-        for nb, doomed in preds.items():
-            if not doomed and ok(nb) and (free(nb) or not require_free):
-                return nb
-        for hid, h in self.hosts.items():
-            if hid != failing and ok(hid) and free(hid):
-                return hid
-        if not require_free:
-            for hid, h in self.hosts.items():
-                if hid != failing and ok(hid):
-                    return hid
-        return None
+    def same_component(self, a: int, b: int) -> bool:
+        return self.partition is None or self.partition.get(a) == self.partition.get(b)
 
     # --- scenario-engine hooks: blacklisting & spare re-provisioning ------
     def fail(self, hid: int, permanent: bool = False):

@@ -14,7 +14,13 @@ Micro-costs come from two tiers (kept separate in the output):
     executing the runtime's migration machinery (real state move, real
     dependency surgery, hash-verified) plus profile-modelled control costs;
   * modelled — checkpoint create/restore times from the calibrated
-    profile (cluster.py) and staging/log-mining constants below.
+    profile (cluster.py) and staging/log-mining constants in
+    ``repro.strategies.costmodel``.
+
+Which strategies exist — and how each one prices a failure — is no longer
+encoded here: ``strategy_rows`` iterates the ``repro.strategies`` registry
+and reads each strategy's :class:`~repro.strategies.base.StrategyCosts`.
+Registering a new strategy makes it appear in the tables automatically.
 
 Cold-restart note: the paper's cold-restart schedule semantics are
 underspecified (21:15:17 cannot be reproduced from any restart model we
@@ -23,37 +29,55 @@ difference in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import asdict, dataclass
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.agent import Agent
 from repro.core.checkpoint import (
+    CHECKPOINT_KINDS,
     CheckpointPolicyCfg,
     modelled_checkpoint_overhead_s,
     modelled_restore_s,
 )
-from repro.core.cluster import ClusterProfile, get_profile
+from repro.core.cluster import get_profile
 from repro.core.failure import PREDICTION_LEAD_S, mean_random_failure_time
 from repro.core.migration import DependencyGraph
-from repro.core.rules import decide
 from repro.core.runtime import ClusterRuntime
 from repro.core.virtual_core import VirtualCore
+from repro.strategies.base import CostContext, StrategyRow
+from repro.strategies.registry import (
+    get as get_strategy,
+    get_class as get_strategy_class,
+    names as strategy_names,
+)
 
-# calibrated per-failure overhead components (documented in DESIGN.md §2):
-LOG_MINING_S = {"agent": 312.6, "core": 266.6}  # health-log mining + staging
-PROBE_S_PER_HOUR = {"agent": 25.0, "core": 5.0}  # background probing cost
-COLD_REINSTATE_S = 600.0  # paper: "at least ten minutes"
+# cost-model constants live with the strategies now; re-exported here for
+# backwards compatibility (tests, notebooks):
+from repro.strategies.costmodel import (  # noqa: F401  (re-exports)
+    COLD_REINSTATE_S,
+    LOG_MINING_S,
+    OVH_GROWTH,
+    PROBE_S_PER_HOUR,
+    RANDOM_ELAPSED_S,
+    RST_GROWTH,
+)
 
-# paper-measured growth of checkpoint reinstate/overhead with periodicity
-# (Table 2: 14:08 -> 15:40 -> 16:27 and 8:05 -> 10:17 -> 11:53):
-RST_GROWTH = {1.0: 1.0, 2.0: 1.108, 4.0: 1.164}
-OVH_GROWTH = {1.0: 1.0, 2.0: 1.272, 4.0: 1.470}
-# paper-measured mean random-failure elapsed times (5000 trials): 31:14,
-# 1:03:22, 2:08:47 for 1/2/4 h windows (slightly above the uniform mean).
-RANDOM_ELAPSED_S = {1.0: 1874.0, 2.0: 3802.0, 4.0: 7727.0}
+__all__ = [
+    "COLD_REINSTATE_S",
+    "LOG_MINING_S",
+    "MicroCosts",
+    "OVH_GROWTH",
+    "PROBE_S_PER_HOUR",
+    "RANDOM_ELAPSED_S",
+    "RST_GROWTH",
+    "StrategyRow",
+    "fmt_hms",
+    "measure_micro",
+    "scenario_totals",
+    "strategy_rows",
+]
 
 
 @dataclass
@@ -124,7 +148,7 @@ def measure_micro(
 
     total_bytes = s_d_bytes * max(n_nodes - 1, 1)
     co, cr = {}, {}
-    for kind in ("central_single", "central_multi", "decentral"):
+    for kind in CHECKPOINT_KINDS:  # infra variants, not strategy dispatch
         cfgk = CheckpointPolicyCfg(kind=kind, n_servers=3)
         co[kind] = modelled_checkpoint_overhead_s(cfgk, profile, total_bytes, n_nodes)
         cr[kind] = modelled_restore_s(cfgk, profile, total_bytes, n_nodes)
@@ -140,21 +164,6 @@ def measure_micro(
         measured_agent_s=float(arep["reinstate_measured_s"]),
         measured_core_s=float(crep["reinstate_measured_s"]),
     )
-
-
-@dataclass
-class StrategyRow:
-    strategy: str
-    periodicity_h: float
-    predict_s: float
-    reinstate_periodic_s: float
-    reinstate_random_s: float
-    overhead_periodic_s: float
-    overhead_random_s: float
-    exec_nofail_s: float
-    exec_1periodic_s: float
-    exec_1random_s: float
-    exec_5random_s: float
 
 
 def _totals(
@@ -197,31 +206,22 @@ def strategy_rows(
     micro: Optional[MicroCosts] = None,
     periodic_offset_min: Optional[float] = None,  # Table 1 uses 15; Table 2 14*p
 ) -> List[StrategyRow]:
-    """Rows for Tables 1-2. For checkpointing, a failure loses the elapsed
-    time since the last checkpoint; for the proactive approaches, prediction
-    + migration preserve progress (lost_progress=False)."""
+    """Rows for Tables 1-2, one per registered strategy per periodicity.
+
+    Each strategy prices itself via ``costs() -> StrategyCosts``: for the
+    reactive policies a failure loses the elapsed time since the last
+    checkpoint (``lost_progress``); for the proactive approaches
+    prediction + migration preserve progress. Strategies outside the
+    per-periodicity grid (cold restart) contribute their own rows via
+    ``table_rows``."""
     micro = micro or measure_micro(profile_name, n_nodes, z, s_d_bytes)
     J = job_hours * 3600.0
     rows: List[StrategyRow] = []
 
-    # cold restart (no FT): loses everything since job start; first-crossing
-    # progress-mark semantics (see module docstring).
-    per_elapsed = []
-    prog_marks = [h * 3600 + 14 * 60 for h in range(int(job_hours))]
-    per_elapsed = prog_marks  # elapsed since start at each failure
-    rand_mean = mean_random_failure_time(3600.0)
-    cold_periodic = J + sum(e + COLD_REINSTATE_S for e in per_elapsed)
-    # random: mean elapsed since start for failure i ~ i*3600 + rand_mean
-    cold_random = J + sum(h * 3600 + rand_mean + COLD_REINSTATE_S for h in range(int(job_hours)))
-    cold_random5 = J + 5 * sum(
-        h * 3600 + rand_mean + COLD_REINSTATE_S for h in range(int(job_hours))
-    )
-    rows.append(
-        StrategyRow(
-            "cold_restart", 0.0, 0.0, COLD_REINSTATE_S, COLD_REINSTATE_S, 0.0, 0.0,
-            J, cold_periodic, cold_random, cold_random5,
-        )
-    )
+    strats = [get_strategy(name) for name in strategy_names()]
+    for strat in strats:
+        if not strat.tabulated:
+            rows.extend(strat.table_rows(job_hours) or [])
 
     for p_h in periodicities_h:
         period_s = p_h * 3600.0
@@ -231,35 +231,25 @@ def strategy_rows(
             else 14 * 60.0 * p_h  # Table 2 scales the offset with the period
         )
         elapsed_random = RANDOM_ELAPSED_S.get(p_h, mean_random_failure_time(period_s))
-        # checkpoint costs grow with period (larger deltas/logs) — paper-
-        # measured ratios (RST_GROWTH/OVH_GROWTH)
-        growth = RST_GROWTH.get(p_h, 1.0 + 0.108 * np.log2(max(p_h, 1.0)))
-        ovh_growth = OVH_GROWTH.get(p_h, 1.0 + 0.27 * np.log2(max(p_h, 1.0)))
-        for kind in ("central_single", "central_multi", "decentral"):
-            rst = micro.ckpt_reinstate_s[kind] * growth
-            ovh = micro.ckpt_overhead_s[kind] * ovh_growth
+        ctx = CostContext(micro=micro, period_h=p_h, z=z, s_d_bytes=s_d_bytes)
+        for strat in strats:
+            if not strat.tabulated:
+                continue
+            c = strat.costs(ctx)
             t1p, t1r, t5r = _totals(
-                J, period_s, elapsed_periodic, elapsed_random, rst, ovh, 0.0
+                J,
+                period_s,
+                elapsed_periodic,
+                elapsed_random,
+                c.reinstate_s + c.predict_s,
+                c.overhead_s,
+                c.probe_s_per_hour,
+                lost_progress=c.lost_progress,
             )
             rows.append(
                 StrategyRow(
-                    kind, p_h, 0.0, rst, rst, ovh, ovh, J, t1p, t1r, t5r
-                )
-            )
-        for mech in ("agent", "core", "hybrid"):
-            m = decide(z, s_d_bytes, s_d_bytes).mechanism if mech == "hybrid" else mech
-            rst = micro.agent_reinstate_s if m == "agent" else micro.core_reinstate_s
-            ovh = (
-                micro.agent_overhead_s if m == "agent" else micro.core_overhead_s
-            ) * (1.0 + 0.27 * np.log2(max(p_h, 1.0)))
-            probe = PROBE_S_PER_HOUR[m]
-            t1p, t1r, t5r = _totals(
-                J, period_s, 0.0, 0.0, rst + micro.predict_s, ovh, probe,
-                lost_progress=False,
-            )
-            rows.append(
-                StrategyRow(
-                    mech, p_h, micro.predict_s, rst, rst, ovh, ovh, J, t1p, t1r, t5r
+                    strat.name, p_h, c.predict_s, c.reinstate_s, c.reinstate_s,
+                    c.overhead_s, c.overhead_s, J, t1p, t1r, t5r,
                 )
             )
     return rows
@@ -277,22 +267,16 @@ def fmt_hms(s: float) -> str:
 # identical totals; everything else is executed by the event-driven
 # CampaignEngine (repro.scenarios.engine).
 # ------------------------------------------------------------------------
-# canonical strategy lists — the engine derives its APPROACHES from these
-# (sim cannot import engine at module level: engine imports sim eagerly)
-CHECKPOINT_STRATEGIES = ("central_single", "central_multi", "decentral")
-PROACTIVE_STRATEGIES = ("agent", "core", "hybrid")
-ALL_STRATEGIES = CHECKPOINT_STRATEGIES + PROACTIVE_STRATEGIES
-
-
 def scenario_totals(
     scenario,
-    strategies=ALL_STRATEGIES,
+    strategies=None,
     micro: Optional[MicroCosts] = None,
     profile_name: str = "placentia",
 ) -> Dict[str, Dict]:
     """Total execution time of a scenario under each FT strategy.
 
-    `scenario` is a ScenarioSpec or a registered scenario name. Returns
+    `scenario` is a ScenarioSpec or a registered scenario name;
+    `strategies` defaults to every name in the strategy registry. Returns
     {strategy: {"total_s", "source", "survived", ...}} where source is
     "closed_form" for the paper-reducible specs and "engine" otherwise."""
     from repro.scenarios import registry  # lazy: avoid import cycle
@@ -300,6 +284,11 @@ def scenario_totals(
     from repro.scenarios.spec import ScenarioSpec
 
     spec: ScenarioSpec = registry.get(scenario) if isinstance(scenario, str) else scenario
+    strategies = (
+        tuple(strategy_names())
+        if strategies is None
+        else tuple(get_strategy_class(s).name for s in strategies)  # aliases ok
+    )
     micro = micro or measure_micro(profile_name, n_nodes=spec.n_nodes)
     out: Dict[str, Dict] = {}
 

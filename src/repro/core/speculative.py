@@ -36,9 +36,10 @@ class StagedCopy:
 class SpeculativeEgress:
     """Per-supervised-host pre-staging manager."""
 
-    def __init__(self, rt: ClusterRuntime, warn_threshold: float = 0.5):
+    def __init__(self, rt: ClusterRuntime, warn_threshold: float = 0.5, placement=None):
         self.rt = rt
         self.warn_threshold = warn_threshold
+        self.placement = placement or rt.placement  # pluggable target choice
         self.staged: Optional[StagedCopy] = None
         self.stats = {"stages": 0, "delta_leaves": 0, "full_leaves": 0}
 
@@ -51,7 +52,7 @@ class SpeculativeEgress:
         payload when hazard is in the warning band."""
         if hazard < self.warn_threshold:
             return None
-        target = self.rt.pick_target(host)
+        target = self.placement.pick(self.rt, host)
         if target is None:
             return None
         t0 = time.perf_counter()

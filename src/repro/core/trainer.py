@@ -1,10 +1,12 @@
 """FTTrainer — the paper's FT approaches bound to a REAL JAX training loop.
 
 The trainer runs an actual jitted train step; a virtual cluster of W hosts
-supervises it. Failures are injected at step boundaries from a
-FailureModel schedule:
+supervises it. The fault-tolerance policy is resolved through the
+``repro.strategies`` registry (``policy`` is any registered strategy name,
+the ``"checkpoint"`` alias for the reactive baseline, or ``"none"``);
+failures are injected at step boundaries from a FailureModel schedule:
 
-  * predicted failure (the 29 %): the active policy migrates the full
+  * predicted failure (the 29 %): the active strategy migrates the full
     training state to a spare/neighbour host BEFORE the failure lands —
     zero lost steps; migration is a real, hash-verified state move.
   * unpredicted failure: the state on the failed host is lost; the policy
@@ -23,20 +25,19 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List
 
 import jax
 import numpy as np
 
-from repro.core.agent import Agent
 from repro.core.checkpoint import AsyncCheckpointer, CheckpointStore
 from repro.core.elastic import replan, reshard_batch
 from repro.core.failure import FailureEvent, PREDICTION_PRECISION
-from repro.core.hybrid import HybridUnit
 from repro.core.predictor import FailurePredictor
 from repro.core.runtime import ClusterRuntime
 from repro.core.straggler import StragglerDetector, mitigate
-from repro.core.virtual_core import VirtualCore
+from repro.strategies.placement import get_placement
+from repro.strategies.registry import get as get_strategy
 from repro.utils.tree import tree_hash
 
 
@@ -66,7 +67,7 @@ class FTTrainer:
         train_step: Callable,
         init_state: Callable,
         make_batch: Callable[[int], dict],
-        policy: str = "hybrid",  # none|checkpoint|agent|core|hybrid
+        policy: str = "hybrid",  # any registered strategy | "checkpoint" | "none"
         n_hosts: int = 4,
         ckpt_dir: str = "/tmp/repro_ckpt",
         ckpt_every: int = 10,
@@ -74,11 +75,17 @@ class FTTrainer:
         speculative: bool = False,  # pre-stage state in the warning band
         profile: str = "tpu_pod",
         seed: int = 0,
+        placement: str = "nearest-spare",
     ):
         self.train_step = jax.jit(train_step)
+        self.init_state = init_state
         self.make_batch = make_batch
         self.policy = policy
-        self.rt = ClusterRuntime(n_hosts=n_hosts, n_spares=2, profile=profile, seed=seed)
+        self.placement = get_placement(placement)
+        self.rt = ClusterRuntime(
+            n_hosts=n_hosts, n_spares=2, profile=profile, seed=seed,
+            placement=self.placement,
+        )
         self.rt.predictor = FailurePredictor.train(seed=seed)
         self.store = CheckpointStore(ckpt_dir)
         self.async_ckpt = AsyncCheckpointer(self.store) if async_ckpt else None
@@ -87,10 +94,24 @@ class FTTrainer:
         self.state = init_state()
         # the state lives on host 0 initially (the supervised worker)
         self.home = 0
-        self.rt.occupy(self.home, self.state, f"{policy}:0")
-        self.agent = Agent(0, self.home, self.state)
-        self.vcore = VirtualCore(0, self.home)
-        self.hybrid = HybridUnit(self.agent, self.vcore)
+        # the policy string resolves through the strategy registry — no
+        # per-policy branching anywhere in the trainer. Registered names
+        # always win; "none" and the "<policy>_ref" fallback (failure-free
+        # reference-run labels) train without FT; any other unknown name
+        # raises rather than silently dropping FT.
+        if policy == "none":
+            self.strategy = None
+        else:
+            try:
+                self.strategy = get_strategy(policy, placement=self.placement)
+            except KeyError:
+                if not policy.endswith("_ref"):
+                    raise
+                self.strategy = None
+        if self.strategy is not None:
+            self.strategy.attach(self.rt, {self.home: self.state})
+        else:
+            self.rt.occupy(self.home, self.state, f"{policy}:0")
         # data-parallel work distribution across the virtual hosts (the
         # straggler detector rebalances it; elastic shrink re-plans it)
         self.n_hosts = n_hosts
@@ -100,23 +121,19 @@ class FTTrainer:
         if speculative:
             from repro.core.speculative import SpeculativeEgress
 
-            self.egress = SpeculativeEgress(self.rt)
+            self.egress = SpeculativeEgress(self.rt, placement=self.placement)
 
     # -- internal ------------------------------------------------------------
+    @property
+    def _proactive(self) -> bool:
+        return self.strategy is not None and self.strategy.proactive
+
     def _migrate(self) -> dict:
-        if self.policy == "agent":
-            rep = self.agent.migrate(self.rt)
-            self.home = self.agent.host
-        elif self.policy == "core":
-            rep = self.vcore.migrate_job(self.rt)
-            self.home = self.vcore.host
-        else:  # hybrid
-            rep = self.hybrid.handle_prediction(self.rt)
-            self.home = self.hybrid.host
+        rep = self.strategy.migrate(self.home)
+        self.home = int(rep["to"])
         # state follows the shard on the new host
         self.state = self.rt.hosts[self.home].shard
-        self.agent.host = self.vcore.host = self.home
-        self.agent.payload = self.state
+        self.strategy.sync(self.home, self.state)
         return rep
 
     def run(self, n_steps: int, failures: List[FailureEvent], step_time_s: float = 1.0) -> FTReport:
@@ -130,7 +147,7 @@ class FTTrainer:
             now = step * step_time_s
 
             # --- proactive window: predicted failures + false positives ----
-            if self.policy in ("agent", "core", "hybrid"):
+            if self._proactive:
                 # real probe of the supervised host
                 self.rt.heartbeats.tick()
                 # straggler mitigation: flag hosts whose heartbeat latency
@@ -178,10 +195,10 @@ class FTTrainer:
                         mrep = self.egress.migrate_prestaged(
                             self.home, self.state, self.state
                         )
+                        old_home = self.home
                         self.home = mrep["to"]
                         self.state = self.rt.hosts[self.home].shard
-                        self.agent.host = self.vcore.host = self.home
-                        self.agent.payload = self.state
+                        self.strategy.rehome(old_home, self.home, self.state)
                         mrep.setdefault("staging_modelled_s", 0.0)
                     else:
                         mrep = self._migrate()
@@ -207,13 +224,22 @@ class FTTrainer:
                     if self.async_ckpt:
                         self.async_ckpt.wait()
                     lstep = self.store.latest_step()
-                    assert lstep is not None, "unpredicted failure before first checkpoint"
-                    self.state, rrep = self.store.restore(lstep, self.state)
+                    if lstep is None:
+                        # strategies that keep no checkpoint cadence (cold
+                        # restart, custom no-backstop strategies) restart
+                        # from scratch — everything re-executes
+                        assert (
+                            self.strategy is None or not self.strategy.wants_checkpoints
+                        ), "unpredicted failure before first checkpoint"
+                        self.state = self.init_state()
+                        lstep = 0
+                    else:
+                        self.state, rrep = self.store.restore(lstep, self.state)
                     rep.ft_time_s += time.perf_counter() - t0
                     rep.restores += 1
                     rep.steps_reexecuted += step - lstep
                     step = lstep
-                    target = self.rt.pick_target(ev.node)
+                    target = self.placement.pick(self.rt, ev.node)
                     if target is None:
                         # no spare, no healthy neighbour: elastic shrink —
                         # rebalance shards/batch over the survivors
@@ -230,14 +256,17 @@ class FTTrainer:
                         rep.events.append({"t": now, "kind": "elastic_shrink",
                                            "alive": alive})
                     self.rt.occupy(target, self.state, "restored")
-                    self.home = target
-                    self.agent.host = self.vcore.host = target
+                    old_home, self.home = self.home, target
+                    if self.strategy is not None:
+                        self.strategy.rehome(old_home, target, self.state)
                     rep.events.append({"t": now, "kind": "unpredicted_failure_restore"})
                 self.rt.heartbeats.revive(ev.node)  # node returns to pool later
 
             # --- checkpoint cadence -----------------------------------------
-            if self.policy in ("checkpoint", "agent", "core", "hybrid") and (
-                step % self.ckpt_every == 0
+            if (
+                self.strategy is not None
+                and self.strategy.wants_checkpoints
+                and step % self.ckpt_every == 0
             ):
                 t0 = time.perf_counter()
                 if self.async_ckpt:
@@ -258,7 +287,8 @@ class FTTrainer:
             step += 1
             # keep the shard view in sync (zero-copy reference)
             self.rt.hosts[self.home].shard = self.state
-            self.agent.payload = self.state
+            if self.strategy is not None:
+                self.strategy.sync(self.home, self.state)
 
         if self.async_ckpt:
             self.async_ckpt.wait()

@@ -15,12 +15,15 @@ from typing import Dict, Optional
 
 from repro.core.migration import move_state, reestablish_deps_core
 from repro.core.runtime import ClusterRuntime
+from repro.strategies.placement import PlacementPolicy
 
 
 @dataclass
 class VirtualCore:
     vid: int
     host: int
+    # target selection is a pluggable policy; None -> the runtime's default
+    placement: Optional[PlacementPolicy] = None
 
     def self_probe(self, rt: ClusterRuntime) -> bool:
         log = rt.heartbeats.logs[self.host]
@@ -37,7 +40,7 @@ class VirtualCore:
         """Step 3.2.1: migrate sub-job on VC_i onto an adjacent core VC_a."""
         old = self.host
         if target is None:
-            target = rt.pick_target(old)
+            target = (self.placement or rt.placement).pick(rt, old)
         assert target is not None, "no healthy target available"
         shard = rt.hosts[old].shard
         moved, mrep = move_state(shard, rt.profile)  # raw shard, no wrapper

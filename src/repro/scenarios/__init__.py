@@ -8,9 +8,20 @@ Monte-Carlo trials over the closed-form accounting model.
     result = CampaignEngine(spec, approach="hybrid").run()
 """
 from repro.scenarios import registry
-from repro.scenarios.engine import APPROACHES, CampaignEngine, CampaignResult
+from repro.scenarios.engine import CampaignEngine, CampaignResult
 from repro.scenarios.montecarlo import MCParams, mc_totals, python_loop_baseline
 from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec
+
+
+def __getattr__(name):
+    if name == "APPROACHES":
+        # derived live from the strategy registry (a from-import here
+        # would freeze the tuple at package-import time and miss
+        # strategies registered afterwards)
+        from repro.scenarios import engine
+
+        return engine.APPROACHES
+    raise AttributeError(name)
 
 __all__ = [
     "APPROACHES",

@@ -2,31 +2,31 @@
 arbitrary failure-event stream.
 
 Where ``core/sim.py`` reproduces the paper's closed-form table accounting,
-the engine *executes* a scenario: it builds a :class:`ClusterRuntime`, puts
-an :class:`Agent` / :class:`VirtualCore` / :class:`HybridUnit` (or a
-checkpoint restore policy) on every worker host, then replays the spec's
-merged failure stream in time order with
+the engine *executes* a scenario: it resolves the approach through the
+``repro.strategies`` registry, attaches the strategy to a
+:class:`ClusterRuntime` (the strategy places its Agent / VirtualCore /
+HybridUnit — or checkpoint restore state — on every worker host), then
+replays the spec's merged failure stream in time order with
 
   * node blacklisting — a host that exceeds ``max_strikes`` failures (or
     any failure when ``repair_s`` is None) never hosts work again;
-  * spare re-provisioning — repaired hosts rejoin the spare pool after
-    ``repair_s``;
+  * spare re-provisioning — repaired hosts rejoin the spare pool after a
+    repair delay (constant, or sampled per repair from the spec's
+    heavy-tailed ``("lognormal", mu, sigma)`` distribution);
   * dynamic cascades — a ``cascade`` event re-targets the host the victim
     migrated TO (unknowable at stream-generation time) and fails it
     ``delay_s`` later, down to ``depth`` levels;
-  * spare-pool exhaustion — when no healthy, un-blacklisted target exists
-    the campaign is lost (``survived=False``, ``failed_at_s`` records when).
+  * spare-pool exhaustion — when the placement policy finds no healthy,
+    un-blacklisted target the campaign is lost (``survived=False``,
+    ``failed_at_s`` records when).
 
-Accounting semantics (documented deviation from the paper, which only
-defines single-failure tables): predictable failures are handled
-proactively — the unit migrates during the lead window and no progress is
-lost; *unpredictable* failures under a proactive approach lose the progress
-since the window start (the sub-job's periodic progress mark), because the
-proactive approaches keep no byte-level checkpoints to restore from.
-Checkpoint policies lose the elapsed time since the last completed
-checkpoint; a failure *during* checkpoint creation additionally invalidates
-the in-flight checkpoint (restores from the previous one, a full window
-back, plus the wasted partial write).
+The tick loop is strategy-agnostic: every per-approach decision — how to
+move the work, what a failure costs, what background probing costs — goes
+through the :class:`~repro.strategies.base.FaultToleranceStrategy`
+protocol (``on_prediction`` / ``on_failure`` / ``tick_costs``), so a
+strategy registered anywhere immediately runs in campaigns.  Accounting
+semantics per strategy are documented on the builtin adapters
+(:mod:`repro.strategies.builtin`).
 """
 from __future__ import annotations
 
@@ -36,24 +36,20 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.agent import Agent
 from repro.core.failure import FailureEvent
-from repro.core.hybrid import HybridUnit
 from repro.core.migration import DependencyGraph
 from repro.core.runtime import ClusterRuntime
-from repro.core.sim import (
-    CHECKPOINT_STRATEGIES as CHECKPOINT,
-    OVH_GROWTH,
-    PROACTIVE_STRATEGIES as PROACTIVE,
-    PROBE_S_PER_HOUR,
-    RST_GROWTH,
-    MicroCosts,
-    measure_micro,
-)
-from repro.core.virtual_core import VirtualCore
+from repro.core.sim import MicroCosts, measure_micro
 from repro.scenarios.spec import ScenarioSpec
+from repro.strategies import registry as strategy_registry
 
-APPROACHES = PROACTIVE + CHECKPOINT
+
+def __getattr__(name):
+    # APPROACHES is derived live from the strategy registry so that
+    # strategies registered after import are included.
+    if name == "APPROACHES":
+        return tuple(strategy_registry.names())
+    raise AttributeError(name)
 
 
 @dataclass
@@ -94,7 +90,7 @@ class CampaignResult:
 
 
 class CampaignEngine:
-    """Executes one scenario under one approach."""
+    """Executes one scenario under one registered strategy."""
 
     def __init__(
         self,
@@ -104,15 +100,21 @@ class CampaignEngine:
         micro: Optional[MicroCosts] = None,
         payload_elems: int = 1 << 10,
         seed: Optional[int] = None,
+        placement: Optional[str] = None,
     ):
-        if approach not in APPROACHES:
-            raise ValueError(f"approach {approach!r}; one of {APPROACHES}")
+        try:
+            cls = strategy_registry.get_class(approach)
+        except KeyError:
+            raise ValueError(
+                f"approach {approach!r}; one of {tuple(strategy_registry.names())}"
+            ) from None
         self.spec = spec
-        self.approach = approach
+        self.approach = cls.name  # canonical ("checkpoint" -> "central_single")
         self.profile = profile
         self.micro = micro or measure_micro(profile, n_nodes=spec.n_nodes)
         self.payload_elems = payload_elems
         self.seed = spec.seed if seed is None else seed
+        self.placement = placement
 
     # ------------------------------------------------------------------
     def _build(self) -> ClusterRuntime:
@@ -127,57 +129,19 @@ class CampaignEngine:
             seed=self.seed,
             racks=spec.effective_racks(),
         )
-        self.units: Dict[int, object] = {}
-        for h in range(spec.n_nodes):
-            payload = {
-                "partial": np.full(self.payload_elems, h, np.float32),
-                "cursor": h,
-            }
-            rt.occupy(h, payload, f"{self.approach}:{h}")
-            if self.approach == "agent":
-                self.units[h] = Agent(h, h, payload)
-            elif self.approach == "core":
-                self.units[h] = VirtualCore(h, h)
-            elif self.approach == "hybrid":
-                self.units[h] = HybridUnit(Agent(h, h, payload), VirtualCore(h, h))
+        self.strategy = strategy_registry.get(self.approach, placement=self.placement)
+        payloads = {
+            h: {"partial": np.full(self.payload_elems, h, np.float32), "cursor": h}
+            for h in range(spec.n_nodes)
+        }
+        self.strategy.attach(rt, payloads, micro=self.micro, period_s=spec.period_s)
         return rt
-
-    def _growth(self):
-        """Checkpoint-cost growth with the window length — the same curves
-        sim.strategy_rows and montecarlo.params_from_scenario apply, so
-        engine totals stay comparable across the bench report's layers."""
-        p_h = self.spec.period_s / 3600.0
-        rst = RST_GROWTH.get(p_h, 1.0 + 0.108 * float(np.log2(max(p_h, 1.0))))
-        ovh = OVH_GROWTH.get(p_h, 1.0 + 0.27 * float(np.log2(max(p_h, 1.0))))
-        return rst, ovh
-
-    def _per_failure_costs(self):
-        """(reinstate_s, overhead_s) per handled failure for the checkpoint
-        policies. Proactive approaches are billed per EVENT by the
-        mechanism that actually executed (hybrid negotiates per failure)."""
-        m = self.micro
-        if self.approach in CHECKPOINT:
-            rst_g, ovh_g = self._growth()
-            return (
-                m.ckpt_reinstate_s[self.approach] * rst_g,
-                m.ckpt_overhead_s[self.approach] * ovh_g,
-            )
-        return 0.0, 0.0  # resolved per event in _handle_failure
-
-    def _mech_costs(self, mechanism: str):
-        m = self.micro
-        p_h = self.spec.period_s / 3600.0
-        ovh_g = 1.0 + 0.27 * float(np.log2(max(p_h, 1.0)))  # as strategy_rows
-        if mechanism == "agent":
-            return m.agent_reinstate_s, m.agent_overhead_s * ovh_g
-        return m.core_reinstate_s, m.core_overhead_s * ovh_g
 
     # ------------------------------------------------------------------
     def run(self) -> CampaignResult:
         spec = self.spec
         rt = self._build()
-        rst_s, ovh_s = self._per_failure_costs()
-        proactive = self.approach in PROACTIVE
+        strat = self.strategy
 
         # priority queue so repairs/cascades interleave with the spec stream
         q: List[tuple] = []
@@ -187,6 +151,7 @@ class CampaignEngine:
             seq += 1
 
         strikes: Dict[int, int] = {}
+        repair_rng = np.random.default_rng((self.seed, 0x5EED))
         res = CampaignResult(
             scenario=spec.name,
             approach=self.approach,
@@ -229,11 +194,10 @@ class CampaignEngine:
                 rt.heartbeats.mark_degrading(host)
             rt.heartbeats.tick()
 
-            unit = self.units.get(host)
             migrated_to: Optional[int] = None
-            if unit is not None or rt.hosts[host].shard is not None:
+            if strat.has_work(host):
                 # never co-host two sub-jobs: only free targets are eligible
-                target = rt.pick_target(host, require_free=True)
+                target = strat.pick_target(host, require_free=True)
                 if target is None:
                     # spare pool exhausted and no healthy peer: campaign lost
                     rt.fail(host, permanent=True)
@@ -243,13 +207,34 @@ class CampaignEngine:
                         {"t": t, "node": host, "cause": ev.cause, "outcome": "stranded"}
                     )
                     break
-                migrated_to = self._handle_failure(rt, ev, host, target, rst_s, ovh_s, res)
+                out = (
+                    strat.on_prediction(ev, target)
+                    if ev.predictable and strat.proactive
+                    else strat.on_failure(ev, target)
+                )
+                res.lost_s += out.lost_s
+                res.reinstate_s += out.reinstate_s
+                res.overhead_s += out.overhead_s
+                res.n_handled += 1
+                if out.migrated:
+                    res.n_migrations += 1
+                migrated_to = out.new_host
+                res.events.append(
+                    {
+                        "t": float(t),
+                        "node": host,
+                        "to": int(out.new_host),
+                        "cause": ev.cause,
+                        "predictable": bool(ev.predictable),
+                        "outcome": out.outcome,
+                    }
+                )
 
             rt.fail(host, permanent=permanent)
             if permanent:
                 res.n_blacklisted += 1
             elif spec.repair_s is not None:
-                heapq.heappush(q, (t + spec.repair_s, seq, "repair", host))
+                heapq.heappush(q, (t + spec.sample_repair(repair_rng), seq, "repair", host))
                 seq += 1
 
             # dynamic cascade: the host the work LANDED on fails next
@@ -267,91 +252,10 @@ class CampaignEngine:
                 heapq.heappush(q, (nxt.t, seq, "fail", nxt))
                 seq += 1
 
-        if proactive:
-            # hybrid's continuous background probing runs on the core's
-            # cheap path; the agent/core split only matters per migration
-            res.probe_s = PROBE_S_PER_HOUR[
-                "core" if self.approach in ("core", "hybrid") else "agent"
-            ] * (spec.horizon_s / 3600.0)
+        res.probe_s = strat.tick_costs() * (spec.horizon_s / 3600.0)
 
         if res.survived:
             res.total_s = (
                 spec.horizon_s + res.lost_s + res.reinstate_s + res.overhead_s + res.probe_s
             )
         return res
-
-    # ------------------------------------------------------------------
-    def _handle_failure(
-        self,
-        rt: ClusterRuntime,
-        ev: FailureEvent,
-        host: int,
-        target: int,
-        rst_s: float,
-        ovh_s: float,
-        res: CampaignResult,
-    ) -> int:
-        """Move the work off `host` onto `target`; account the delay."""
-        spec = self.spec
-        t = ev.t
-        window_start = np.floor(t / spec.period_s) * spec.period_s
-        proactive = self.approach in PROACTIVE
-
-        if proactive:
-            unit = self.units.pop(host)
-            if self.approach == "agent":
-                rep = unit.migrate(rt, target)
-            elif self.approach == "core":
-                rep = unit.migrate_job(rt, target)
-            else:
-                rep = unit.handle_prediction(rt, target=target)
-            assert rep["hash_ok"]
-            new_host = unit.host
-            self.units[new_host] = unit
-            res.n_migrations += 1
-            # bill the mechanism that actually moved the sub-job (hybrid
-            # negotiates per event via Rules 1-3)
-            rst_ev, ovh_ev = self._mech_costs(rep.get("mechanism", rep["kind"]))
-            if ev.predictable:
-                # moved during the lead window: nothing lost
-                lost = 0.0
-                res.reinstate_s += self.micro.predict_s + rst_ev
-            else:
-                # blind failure: no byte-level checkpoint to restore — the
-                # sub-job replays from its window-start progress mark
-                lost = t - window_start
-                res.reinstate_s += rst_ev
-            res.lost_s += lost
-            res.overhead_s += ovh_ev
-        else:
-            # checkpoint restore onto the target (no live migration)
-            shard = rt.hosts[host].shard
-            rt.release(host)
-            rt.occupy(target, shard, f"{self.approach}:{host}")
-            rt.graph.remap(host, target)
-            if host in self.units:  # units only exist for proactive runs
-                self.units[target] = self.units.pop(host)
-            new_host = target
-            if ev.during_checkpoint:
-                # in-flight checkpoint invalidated: restore from the one a
-                # full window back, plus the wasted partial write
-                lost = (t - window_start) + spec.period_s
-                res.overhead_s += 0.5 * ovh_s
-            else:
-                lost = t - window_start
-            res.lost_s += lost
-            res.reinstate_s += rst_s
-            res.overhead_s += ovh_s
-
-        res.n_handled += 1
-        res.events.append(
-            {
-                "t": float(t),
-                "node": host,
-                "to": int(new_host),
-                "cause": ev.cause,
-                "predictable": bool(ev.predictable),
-                "outcome": "migrated" if proactive else "restored",
-            }
-        )
-        return int(new_host)

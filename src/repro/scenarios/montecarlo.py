@@ -153,13 +153,18 @@ def params_from_scenario(
 ) -> MCParams:
     """Reduce a closed-form-able ScenarioSpec + strategy to MCParams.
 
-    Mirrors `sim.strategy_rows`' cost derivation (growth factors with the
-    checkpoint period, probe costs, lead time). Periodic scenarios match
-    the table rows exactly (deterministic `fixed_lost_s`); random scenarios
-    land ~1 % BELOW them systematically, because MC samples the true
-    uniform loss (mean period/2) while the tables bake in the paper's
-    measured elapsed means (`RANDOM_ELAPSED_S`, slightly above uniform)."""
-    from repro.core.sim import OVH_GROWTH, PROBE_S_PER_HOUR, RST_GROWTH
+    The per-failure costs come straight from the registered strategy's
+    ``costs() -> StrategyCosts`` — the same record ``sim.strategy_rows``
+    tabulates (growth factors with the checkpoint period, probe costs,
+    lead time). Periodic scenarios match the table rows exactly
+    (deterministic `fixed_lost_s`); random scenarios land ~1 % BELOW them
+    systematically, because MC samples the true uniform loss (mean
+    period/2) while the tables bake in the paper's measured elapsed means
+    (`RANDOM_ELAPSED_S`, slightly above uniform).
+
+    ``periodicity_growth=False`` prices reactive strategies at the 1 h
+    (growth = 1) point regardless of the spec's period."""
+    from repro.strategies import CostContext, get as get_strategy
 
     p_h = spec.period_s / 3600.0
     per_window = 1
@@ -173,37 +178,34 @@ def params_from_scenario(
                 fixed_lost_s = float(proc.params.get("offset_s", 900.0))
             break
 
-    if strategy in ("central_single", "central_multi", "decentral"):
-        # same fallback curves as strategy_rows for non-table periods
-        growth = (
-            RST_GROWTH.get(p_h, 1.0 + 0.108 * float(np.log2(max(p_h, 1.0))))
-            if periodicity_growth
-            else 1.0
+    strat = get_strategy(strategy)
+    if not strat.tabulated:
+        # cold restart loses everything since the last restart — per-window
+        # loss sampling cannot express that; run it through CampaignEngine
+        raise ValueError(
+            f"strategy {strategy!r} has no per-window closed form; "
+            "execute it through the scenario engine instead"
         )
-        ovh_growth = (
-            OVH_GROWTH.get(p_h, 1.0 + 0.27 * float(np.log2(max(p_h, 1.0))))
-            if periodicity_growth
-            else 1.0
-        )
+    if not strat.proactive and not periodicity_growth:
+        p_h = 1.0  # growth curves are identically 1 at one hour
+    c = strat.costs(CostContext(micro=micro, period_h=p_h))
+    if c.lost_progress:
         return MCParams(
             J_s=spec.horizon_s,
             period_s=spec.period_s,
             per_window=per_window,
-            reinstate_s=micro.ckpt_reinstate_s[strategy] * growth,
-            overhead_s=micro.ckpt_overhead_s[strategy] * ovh_growth,
+            reinstate_s=c.reinstate_s,
+            overhead_s=c.overhead_s,
             lost_progress=True,
             fixed_lost_s=fixed_lost_s,
         )
-    mech = "core" if strategy in ("core", "hybrid") else "agent"
-    rst = micro.core_reinstate_s if mech == "core" else micro.agent_reinstate_s
-    ovh = micro.core_overhead_s if mech == "core" else micro.agent_overhead_s
     return MCParams(
         J_s=spec.horizon_s,
         period_s=spec.period_s,
         per_window=per_window,
-        reinstate_s=rst,
-        overhead_s=ovh * (1.0 + 0.27 * float(np.log2(max(p_h, 1.0)))),
-        probe_per_hour_s=PROBE_S_PER_HOUR[mech],
+        reinstate_s=c.reinstate_s,
+        overhead_s=c.overhead_s,
+        probe_per_hour_s=c.probe_s_per_hour,
         lost_progress=False,
-        lead_s=micro.predict_s,
+        lead_s=c.predict_s,
     )

@@ -30,12 +30,14 @@ implements — so the engine, the closed-form accountant in ``core/sim.py``
 and the Monte-Carlo layer all consume any scenario interchangeably.
 
 Specs round-trip through dicts (``to_dict``/``from_dict``) so campaigns can
-be written as JSON and shipped to the benchmark runner.
+be written as JSON and shipped to the benchmark runner. ``repair_s`` is a
+constant number of seconds or a heavy-tailed ``("lognormal", mu, sigma)``
+spec sampled per repair (real repair times are lognormal).
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -75,7 +77,10 @@ class ScenarioSpec:
     period_s: float = 3600.0  # checkpoint interval == failure-window length
     processes: List[FailureProcessSpec] = field(default_factory=list)
     racks: Optional[Dict[int, int]] = None  # node -> rack id
-    repair_s: Optional[float] = None  # None: failed nodes never return
+    # repair delay: None (failed nodes never return), a constant number of
+    # seconds, or the heavy-tailed spec ("lognormal", mu, sigma) sampled
+    # per repair (real repair times are lognormal — ROADMAP quick win)
+    repair_s: Union[None, float, Tuple[str, float, float]] = None
     max_strikes: int = 3  # failures before a node is blacklisted for good
     predictable_fraction: float = PREDICTABLE_FRACTION
     seed: int = 0
@@ -98,7 +103,25 @@ class ScenarioSpec:
         racks = d.get("racks")
         if racks is not None:
             d["racks"] = {int(k): int(v) for k, v in racks.items()}
+        repair = d.get("repair_s")
+        if isinstance(repair, (tuple, list)):  # JSON round-trips tuples as lists
+            d["repair_s"] = (str(repair[0]), float(repair[1]), float(repair[2]))
         return ScenarioSpec(**d)
+
+    def sample_repair(self, rng: np.random.Generator) -> Optional[float]:
+        """One repair delay in seconds: the constant, or a draw from the
+        heavy-tailed ``("lognormal", mu, sigma)`` distribution."""
+        r = self.repair_s
+        if r is None:
+            return None
+        if isinstance(r, (tuple, list)):
+            kind, mu, sigma = r
+            if kind != "lognormal":
+                raise ValueError(
+                    f"unknown repair_s distribution {kind!r}; only 'lognormal'"
+                )
+            return float(rng.lognormal(float(mu), float(sigma)))
+        return float(r)
 
     def effective_racks(self) -> Optional[Dict[int, int]]:
         """The rack layout both event generation AND the runtime's

@@ -1,0 +1,448 @@
+"""Unified FaultToleranceStrategy API: registry round-trip, closed-form
+regression against the seed simulator's arithmetic, custom-strategy
+extension through the engine, placement policies (nearest-spare parity,
+partition-aware quorum), lognormal repair times, trainer policy
+resolution."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.failure import FailureEvent, mean_random_failure_time
+from repro.core.rules import decide
+from repro.core.runtime import ClusterRuntime
+from repro.core.sim import (
+    COLD_REINSTATE_S,
+    OVH_GROWTH,
+    PROBE_S_PER_HOUR,
+    RANDOM_ELAPSED_S,
+    RST_GROWTH,
+    MicroCosts,
+    _totals,
+    measure_micro,
+    strategy_rows,
+)
+from repro.scenarios.engine import CampaignEngine
+from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec
+from repro.strategies import (
+    CostContext,
+    FailureOutcome,
+    FaultToleranceStrategy,
+    StrategyCosts,
+    get,
+    get_placement,
+    names,
+    placement_names,
+    register,
+    unregister,
+)
+
+SEED_STRATEGIES = (
+    "cold_restart", "central_single", "central_multi", "decentral",
+    "agent", "core", "hybrid",
+)
+
+
+@pytest.fixture(scope="module")
+def micro():
+    return measure_micro("placentia", n_nodes=4)
+
+
+def _one_failure_spec(n_nodes=4):
+    return ScenarioSpec(
+        name="smoke_one_failure",
+        n_nodes=n_nodes,
+        n_spares=2,
+        horizon_s=3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("burst", {"t": 1200.0, "k": 1})],
+        repair_s=600.0,
+    )
+
+
+# ------------------------------------------------------------- registry ---
+def test_registry_has_the_seven_paper_strategies():
+    have = names()
+    for required in SEED_STRATEGIES:
+        assert required in have
+    # registration order is table row order: cold first, then ckpt, proactive
+    assert tuple(have[:7]) == SEED_STRATEGIES
+
+
+def test_registry_round_trip_every_strategy(micro):
+    """Acceptance: every names() entry instantiates, attaches, yields
+    finite StrategyCosts, and survives a one-failure smoke campaign."""
+    ctx = CostContext(micro=micro, period_h=1.0)
+    for name in names():
+        strat = get(name)
+        assert isinstance(strat, FaultToleranceStrategy)
+        assert strat.name == name
+        c = strat.costs(ctx)
+        assert isinstance(c, StrategyCosts) and c.finite(), name
+
+        rt = ClusterRuntime(n_hosts=4, n_spares=2, profile="placentia")
+        strat.attach(rt, {h: {"x": np.zeros(8, np.float32)} for h in range(4)}, micro=micro)
+        assert all(strat.has_work(h) for h in range(4))
+        assert isinstance(strat.probe(), dict)
+
+        res = CampaignEngine(_one_failure_spec(), name, micro=micro).run()
+        assert res.survived and res.n_handled == 1, name
+        assert np.isfinite(res.total_s) and res.total_s > 3600.0, name
+
+
+def test_unknown_strategy_and_duplicate_registration_rejected():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        get("voodoo")
+    with pytest.raises(KeyError, match="already registered"):
+        register("agent")(type("X", (FaultToleranceStrategy,), {}))
+    # aliases share the resolution namespace with canonical names
+    with pytest.raises(KeyError, match="already registered"):
+        register("checkpoint")(type("X", (FaultToleranceStrategy,), {}))
+    with pytest.raises(KeyError, match="already registered"):
+        register("fresh_name", aliases=("agent",))(
+            type("X", (FaultToleranceStrategy,), {})
+        )
+    assert "fresh_name" not in names()
+    # get_class shares get()'s helpful error path
+    from repro.strategies import get_class
+
+    with pytest.raises(KeyError, match="unknown strategy"):
+        get_class("centrl_single")
+
+
+def test_cold_restart_engine_bills_each_host_independently(micro):
+    """Two different hosts failing for the first time each lose their OWN
+    elapsed work, not the time since the other host's restart."""
+    spec = ScenarioSpec(
+        name="two_cold_failures",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=3600.0,
+        processes=[
+            FailureProcessSpec("cascade", {"node": 0, "t": 1000.0, "depth": 0}),
+            FailureProcessSpec("cascade", {"node": 1, "t": 1100.0, "depth": 0}),
+        ],
+        repair_s=600.0,
+    )
+    res = CampaignEngine(spec, "cold_restart", micro=micro).run()
+    assert res.n_handled == 2
+    assert res.lost_s == pytest.approx(1000.0 + 1100.0)  # not 1000 + 100
+
+
+def test_checkpoint_alias_resolves_to_central_single(micro):
+    strat = get("checkpoint")
+    assert strat.name == "central_single"
+    assert not strat.proactive and strat.wants_checkpoints
+    # the alias is accepted (and canonicalised) by the engine too
+    res = CampaignEngine(_one_failure_spec(), "checkpoint", micro=micro).run()
+    assert res.approach == "central_single" and res.survived
+
+
+def test_trainer_rejects_unknown_policy(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.core.trainer import FTTrainer
+
+    with pytest.raises(KeyError, match="unknown strategy"):
+        FTTrainer(
+            lambda s, b: (s, {"loss": jnp.zeros(())}),
+            lambda: {"w": jnp.zeros(())},
+            lambda step: {"x": np.ones(2, np.float32)},
+            policy="hybird",  # typo must not silently disable FT
+            ckpt_dir=str(tmp_path),
+        )
+
+
+# --------------------------------------------- closed-form regression -----
+def _seed_rows(job_hours, periodicities_h, micro, z=4, s_d_bytes=(2 ** 19) * 1024,
+               periodic_offset_min=None):
+    """The PRE-refactor ``sim.strategy_rows`` arithmetic, verbatim (string
+    tuples and if/elif ladder included) — the refactor regression oracle."""
+    J = job_hours * 3600.0
+    rows = []
+    prog_marks = [h * 3600 + 14 * 60 for h in range(int(job_hours))]
+    rand_mean = mean_random_failure_time(3600.0)
+    cold_periodic = J + sum(e + COLD_REINSTATE_S for e in prog_marks)
+    cold_random = J + sum(h * 3600 + rand_mean + COLD_REINSTATE_S for h in range(int(job_hours)))
+    cold_random5 = J + 5 * sum(
+        h * 3600 + rand_mean + COLD_REINSTATE_S for h in range(int(job_hours))
+    )
+    rows.append(("cold_restart", 0.0, 0.0, COLD_REINSTATE_S, COLD_REINSTATE_S, 0.0, 0.0,
+                 J, cold_periodic, cold_random, cold_random5))
+    for p_h in periodicities_h:
+        period_s = p_h * 3600.0
+        elapsed_periodic = (
+            periodic_offset_min * 60.0 if periodic_offset_min is not None else 14 * 60.0 * p_h
+        )
+        elapsed_random = RANDOM_ELAPSED_S.get(p_h, mean_random_failure_time(period_s))
+        growth = RST_GROWTH.get(p_h, 1.0 + 0.108 * np.log2(max(p_h, 1.0)))
+        ovh_growth = OVH_GROWTH.get(p_h, 1.0 + 0.27 * np.log2(max(p_h, 1.0)))
+        for kind in ("central_single", "central_multi", "decentral"):
+            rst = micro.ckpt_reinstate_s[kind] * growth
+            ovh = micro.ckpt_overhead_s[kind] * ovh_growth
+            t1p, t1r, t5r = _totals(J, period_s, elapsed_periodic, elapsed_random, rst, ovh, 0.0)
+            rows.append((kind, p_h, 0.0, rst, rst, ovh, ovh, J, t1p, t1r, t5r))
+        for mech in ("agent", "core", "hybrid"):
+            m = decide(z, s_d_bytes, s_d_bytes).mechanism if mech == "hybrid" else mech
+            rst = micro.agent_reinstate_s if m == "agent" else micro.core_reinstate_s
+            ovh = (
+                micro.agent_overhead_s if m == "agent" else micro.core_overhead_s
+            ) * (1.0 + 0.27 * np.log2(max(p_h, 1.0)))
+            probe = PROBE_S_PER_HOUR[m]
+            t1p, t1r, t5r = _totals(
+                J, period_s, 0.0, 0.0, rst + micro.predict_s, ovh, probe, lost_progress=False
+            )
+            rows.append((mech, p_h, micro.predict_s, rst, rst, ovh, ovh, J, t1p, t1r, t5r))
+    return rows
+
+
+@pytest.mark.parametrize(
+    "job_hours,periods,offset",
+    [(1.0, [1.0], 15.0), (5.0, [1.0, 2.0, 4.0], None)],  # Table 1, Table 2
+)
+def test_strategy_rows_totals_unchanged_by_refactor(micro, job_hours, periods, offset):
+    """Acceptance: registry-driven rows == the seed ladder, bit for bit."""
+    got = strategy_rows(job_hours, periods, micro=micro, periodic_offset_min=offset)
+    want = _seed_rows(job_hours, periods, micro, periodic_offset_min=offset)
+    assert len(got) == len(want)
+    for r, w in zip(got, want):
+        assert (
+            r.strategy, r.periodicity_h, r.predict_s,
+            r.reinstate_periodic_s, r.reinstate_random_s,
+            r.overhead_periodic_s, r.overhead_random_s,
+            r.exec_nofail_s, r.exec_1periodic_s, r.exec_1random_s, r.exec_5random_s,
+        ) == w, (r.strategy, w[0])
+
+
+# ----------------------------------------------------- custom strategy ----
+def test_custom_strategy_shows_up_everywhere(micro):
+    """Register a strategy in the test body: it must appear in names(),
+    the engine's APPROACHES, run in campaigns, and gain a table row."""
+
+    @register("teleport")
+    class Teleport(FaultToleranceStrategy):
+        """Instant, lossless, fixed-fee state teleportation."""
+
+        proactive = False
+        wants_checkpoints = False
+
+        def costs(self, ctx):
+            return StrategyCosts(
+                predict_s=0.0, reinstate_s=1.0, overhead_s=2.0, lost_progress=False
+            )
+
+        def on_failure(self, event, target):
+            rt = self.rt
+            shard = rt.hosts[event.node].shard
+            rt.release(event.node)
+            rt.occupy(target, shard, f"{self.name}:{event.node}")
+            rt.graph.remap(event.node, target)
+            return FailureOutcome(
+                new_host=int(target), lost_s=0.0, reinstate_s=1.0, overhead_s=2.0,
+                outcome="migrated", migrated=True,
+            )
+
+    try:
+        import repro.scenarios.engine as engine
+
+        assert "teleport" in names()
+        assert "teleport" in engine.APPROACHES
+        res = CampaignEngine(_one_failure_spec(), "teleport", micro=micro).run()
+        assert res.survived and res.n_migrations == 1
+        assert res.total_s == pytest.approx(3600.0 + 1.0 + 2.0)
+        rows = strategy_rows(1.0, [1.0], micro=micro, periodic_offset_min=15.0)
+        trow = next(r for r in rows if r.strategy == "teleport")
+        assert trow.exec_1random_s == pytest.approx(3600.0 + 1.0 + 2.0)
+    finally:
+        unregister("teleport")
+    assert "teleport" not in names()
+
+
+# ------------------------------------------------------------ placement ---
+def test_nearest_spare_is_the_runtime_default():
+    assert "nearest-spare" in placement_names()
+    rt = ClusterRuntime(n_hosts=4, n_spares=1, profile="placentia")
+    assert get_placement("nearest-spare").pick(rt, 0) == rt.pick_target(0) == 4
+
+
+def test_partition_aware_keeps_migrations_inside_the_component():
+    rt = ClusterRuntime(n_hosts=4, n_spares=2, profile="placentia")
+    # component 0 = {0, 1, 2, 4} (majority), component 1 = {3, 5}
+    rt.set_partition({0: 0, 1: 0, 2: 0, 3: 1, 4: 0, 5: 1})
+    p = get_placement("partition-aware")
+    t = p.pick(rt, 0)
+    assert t == 4  # the same-component spare; spare 5 is across the cut
+    assert rt.same_component(0, t)
+    # minority component: quorum refused, no placement at all
+    assert p.pick(rt, 3) is None
+    # healed: exact nearest-spare behaviour again
+    rt.heal_partition()
+    assert p.pick(rt, 3) == rt.pick_target(3)
+
+
+def test_partition_aware_strategy_refuses_minority_placement(micro):
+    """A strategy carrying the partition-aware policy cannot re-place work
+    for a host stranded in a minority component (the engine would record
+    the campaign as lost at that instant)."""
+    strat = get("core", placement="partition-aware")
+    rt = ClusterRuntime(n_hosts=4, n_spares=2, profile="placentia")
+    strat.attach(rt, {h: {"x": np.zeros(4, np.float32)} for h in range(4)}, micro=micro)
+    rt.set_partition({0: 0, 1: 0, 2: 0, 4: 0, 3: 1, 5: 1})
+    assert strat.pick_target(0, require_free=True) == 4  # majority side: ok
+    assert strat.pick_target(3, require_free=True) is None  # minority: quorum
+    rt.heal_partition()
+    assert strat.pick_target(3, require_free=True) is not None
+
+
+# ------------------------------------------------- lognormal repair -------
+def test_lognormal_repair_spec_roundtrips_and_samples():
+    spec = ScenarioSpec(
+        name="ln_repair",
+        n_nodes=4,
+        n_spares=1,
+        horizon_s=2 * 3600.0,
+        processes=[FailureProcessSpec("flaky", {"node": 1, "every_s": 1800.0})],
+        repair_s=("lognormal", 6.0, 0.5),
+        max_strikes=10,
+    )
+    again = ScenarioSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec  # JSON turns the tuple into a list; from_dict restores
+
+    rng = np.random.default_rng(0)
+    draws = [spec.sample_repair(rng) for _ in range(8)]
+    assert all(d > 0 for d in draws)
+    assert len(set(draws)) == len(draws)  # sampled per repair, not constant
+
+    const = ScenarioSpec.from_dict({**spec.to_dict(), "repair_s": 600.0})
+    assert const.sample_repair(rng) == 600.0  # constant remains the default
+
+    with pytest.raises(ValueError, match="lognormal"):
+        ScenarioSpec.from_dict(
+            {**spec.to_dict(), "repair_s": ("weibull", 1.0, 1.0)}
+        ).sample_repair(rng)
+
+
+def test_lognormal_repair_reprovisions_deterministically(micro):
+    spec = ScenarioSpec(
+        name="ln_engine",
+        n_nodes=4,
+        n_spares=1,
+        horizon_s=3 * 3600.0,
+        processes=[FailureProcessSpec("flaky", {"node": 1, "every_s": 1800.0})],
+        repair_s=("lognormal", 6.0, 0.5),  # median ~ e^6 ~ 400 s
+        max_strikes=10,
+        seed=11,
+    )
+    r1 = CampaignEngine(spec, "core", micro=micro).run()
+    r2 = CampaignEngine(spec, "core", micro=micro).run()
+    assert r1.survived and r1.n_reprovisioned >= 1
+    assert r1.total_s == r2.total_s  # per-repair sampling is seeded
+    assert r1.n_reprovisioned == r2.n_reprovisioned
+
+
+def test_package_level_approaches_is_live():
+    """repro.scenarios.APPROACHES must reflect strategies registered after
+    the package was imported, exactly like engine.APPROACHES."""
+    import repro.scenarios as scen
+    import repro.scenarios.engine as engine
+
+    @register("late_arrival")
+    class Late(FaultToleranceStrategy):
+        def costs(self, ctx):
+            return StrategyCosts(0.0, 1.0, 1.0)
+
+        def on_failure(self, event, target):
+            return FailureOutcome(int(target), 0.0, 1.0, 1.0, "restored")
+
+    try:
+        assert "late_arrival" in engine.APPROACHES
+        assert "late_arrival" in scen.APPROACHES
+    finally:
+        unregister("late_arrival")
+
+
+def test_params_from_scenario_rejects_untabulated_strategies(micro):
+    """Cold restart loses everything since the last restart — the
+    per-window MC reduction cannot express that and must refuse."""
+    from repro.scenarios import registry as scen_registry
+    from repro.scenarios.montecarlo import params_from_scenario
+
+    spec = scen_registry.get("table2_random")
+    with pytest.raises(ValueError, match="no per-window closed form"):
+        params_from_scenario(spec, "cold_restart", micro)
+
+
+# ----------------------------------------------------------- trainer ------
+def test_trainer_no_checkpoint_strategy_restarts_from_scratch(tmp_path):
+    """A registered strategy with wants_checkpoints=False must not crash on
+    an unpredicted failure: the trainer cold-restarts from step 0 and the
+    deterministic pipeline still converges to the failure-free state."""
+    import jax.numpy as jnp
+
+    from repro.core.trainer import FTTrainer
+    from repro.utils.tree import tree_hash
+
+    def train_step(state, batch):
+        s = {"w": state["w"] + batch["x"].sum()}
+        return s, {"loss": s["w"]}
+
+    def mk(policy, failures):
+        tr = FTTrainer(
+            train_step,
+            lambda: {"w": jnp.zeros(())},
+            lambda step: {"x": np.full(2, step, np.float32)},
+            policy=policy,
+            ckpt_dir=str(tmp_path / policy),
+            seed=0,
+        )
+        rep = tr.run(5, failures=failures)
+        return tree_hash(tr.state), rep
+
+    ref_hash, _ = mk("none", [])
+    h, rep = mk("cold_restart", [FailureEvent(t=2.0, node=0, predictable=False)])
+    assert h == ref_hash
+    assert rep.restores == 1 and rep.steps_reexecuted >= 1
+    assert rep.checkpoints == 0  # wants_checkpoints=False: no cadence
+
+
+def test_trainer_resolves_policy_via_registry(tmp_path):
+    import jax.numpy as jnp
+
+    def train_step(state, batch):
+        s = {"w": state["w"] + batch["x"].sum()}
+        return s, {"loss": s["w"]}
+
+    from repro.core.trainer import FTTrainer
+
+    tr = FTTrainer(
+        train_step,
+        lambda: {"w": jnp.zeros(())},
+        lambda step: {"x": np.ones(2, np.float32)},
+        policy="agent",
+        ckpt_dir=str(tmp_path / "agent"),
+        ckpt_every=2,
+        seed=0,
+    )
+    assert tr.strategy is not None and tr.strategy.name == "agent"
+    rep = tr.run(6, failures=[FailureEvent(t=2.0, node=0, predictable=True)])
+    assert rep.migrations >= 1
+    assert rep.steps_run >= 6
+
+    ck = FTTrainer(
+        train_step,
+        lambda: {"w": jnp.zeros(())},
+        lambda step: {"x": np.ones(2, np.float32)},
+        policy="checkpoint",
+        ckpt_dir=str(tmp_path / "ck"),
+        seed=0,
+    )
+    assert ck.strategy.name == "central_single" and not ck.strategy.proactive
+    none = FTTrainer(
+        train_step,
+        lambda: {"w": jnp.zeros(())},
+        lambda step: {"x": np.ones(2, np.float32)},
+        policy="none",
+        ckpt_dir=str(tmp_path / "none"),
+        seed=0,
+    )
+    assert none.strategy is None
