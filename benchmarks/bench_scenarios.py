@@ -1,7 +1,7 @@
 """Scenario-engine benchmark: every registered campaign under every FT
-strategy, plus the vectorised Monte-Carlo speedup certification.
+strategy, plus the vectorised Monte-Carlo speedup certifications.
 
-Emits a JSON report (BENCH_OUT/scenarios.json) with three sections:
+Emits a JSON report (BENCH_OUT/scenarios.json) with four sections:
 
   paper_exactness   the two Table 1/2 scenarios re-expressed as registered
                     specs must match the seed simulator's closed-form
@@ -9,13 +9,20 @@ Emits a JSON report (BENCH_OUT/scenarios.json) with three sections:
   campaigns         per scenario x approach: engine totals, migrations,
                     blacklistings, re-provisionings, survival;
   montecarlo        >= N seeds of the closed-form model via jax.vmap vs the
-                    one-trial-per-Python-call baseline; asserts >= 10x.
+                    one-trial-per-Python-call baseline; asserts >= 10x;
+  trajectories      >= N seeds of FULL engine trajectories per registered
+                    family (cascade, rack, flaky, burst, partition, ...)
+                    through the batched replay kernel: per-family p5/p50/
+                    p95 tails + survival, a trial-for-trial differential
+                    check against the Python engine, and the >= 10x
+                    speedup certification over the per-seed engine loop
+                    (on the mc_stress family).
 
 Usage:
   python benchmarks/bench_scenarios.py [--seeds 2000] [--dry-run]
 
---dry-run swaps in tiny trial counts and skips the speedup assertion — the
-CI smoke path.
+--dry-run swaps in tiny trial counts and skips the speedup assertions —
+the CI smoke path.
 """
 from __future__ import annotations
 
@@ -30,13 +37,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import OUT_DIR
 from repro.core.sim import fmt_hms, measure_micro, scenario_totals, strategy_rows
-from repro.scenarios import mc_totals, python_loop_baseline, registry
+from repro.scenarios import (
+    compile_batch,
+    mc_totals,
+    mc_trajectories,
+    python_loop_baseline,
+    registry,
+)
 from repro.scenarios.engine import CampaignEngine
 from repro.scenarios.montecarlo import params_from_scenario
 from repro.strategies import names as strategy_names
 
 PAPER_SCENARIOS = ("table1_periodic", "table1_random", "table2_random")
 MIN_SPEEDUP = 10.0
+SPEEDUP_FAMILY = "mc_stress"  # big enough that the ratio is unambiguous
+TRAJECTORY_STRATEGIES = ("central_single", "core")
 
 
 def check_paper_exactness(micro) -> dict:
@@ -137,6 +152,76 @@ def run_montecarlo(micro, n_seeds: int, assert_speedup: bool) -> dict:
     return out
 
 
+def run_trajectories(micro, n_seeds: int, assert_speedup: bool) -> dict:
+    """Batched trajectory Monte-Carlo over EVERY registered family:
+    per-family recovery-cost tails, a trial-for-trial differential check
+    against the Python engine, and the speedup certification."""
+    out = {"n_seeds": n_seeds, "families": {}}
+    stress_mc = None
+    for name in registry.names():
+        spec = registry.get(name)
+        batch = compile_batch(spec, n_seeds)  # shared across strategies
+        per = {}
+        for strat in TRAJECTORY_STRATEGIES:
+            mc = mc_trajectories(spec, strat, micro=micro, batch=batch)
+            if name == SPEEDUP_FAMILY and strat == "central_single":
+                stress_mc = mc  # reused for the differential check below
+            per[strat] = {
+                "survival_rate": round(mc["survival_rate"], 4),
+                "mean": fmt_hms(mc["mean_s"]) if mc["survival_rate"] else None,
+                "p5": fmt_hms(mc["p5_s"]) if mc["survival_rate"] else None,
+                "p50": fmt_hms(mc["p50_s"]) if mc["survival_rate"] else None,
+                "p95": fmt_hms(mc["p95_s"]) if mc["survival_rate"] else None,
+                "mean_migrations": round(mc["counters"]["n_migrations"], 2),
+                "mean_blacklisted": round(mc["counters"]["n_blacklisted"], 2),
+            }
+        out["families"][name] = per
+
+    # trial-for-trial differential: the kernel must reproduce the engine
+    # exactly on identical seeds (a slice of the family loop's batch; the
+    # full sweep lives in tests/test_trajectory.py)
+    spec = registry.get(SPEEDUP_FAMILY)
+    mc = stress_mc
+    n_diff = min(20, n_seeds)
+    exact = True
+    for s in range(n_diff):
+        r = CampaignEngine(spec, "central_single", micro=micro, seed=s).run()
+        got = float(mc["trials"]["total_s"][s])
+        want = r.total_s if r.survived else float("nan")
+        exact &= (got != got and want != want) or abs(got - want) < 1e-6 * abs(want)
+    out["engine_match"] = {"n_trials": n_diff, "exact": bool(exact)}
+
+    # speedup: steady-state batched path (the differential call above has
+    # compiled the jitted program for these shapes) vs the per-seed Python
+    # engine loop, extrapolated from n_base real engine runs. The timed
+    # batched call includes tape compilation — the full cost of the path.
+    t0 = time.perf_counter()
+    mc_trajectories(spec, "central_single", n_seeds=n_seeds, micro=micro)
+    t_traj = time.perf_counter() - t0
+    n_base = min(40, n_seeds)
+    t0 = time.perf_counter()
+    for s in range(n_base):
+        CampaignEngine(spec, "central_single", micro=micro, seed=s).run()
+    t_loop = (time.perf_counter() - t0) / n_base * n_seeds
+    speedup = t_loop / max(t_traj, 1e-9)
+    out["speedup"] = {
+        "family": SPEEDUP_FAMILY,
+        "batched_s": round(t_traj, 4),
+        "engine_loop_s": round(t_loop, 4),
+        "engine_loop_seeds_measured": n_base,
+        "speedup": round(speedup, 1),
+    }
+    if assert_speedup:
+        assert exact, "trajectory kernel diverged from the Python engine"
+        assert speedup >= MIN_SPEEDUP, (
+            f"batched trajectory MC only {speedup:.1f}x faster than the "
+            f"per-seed engine loop (need >= {MIN_SPEEDUP}x)"
+        )
+    out["min_speedup_required"] = MIN_SPEEDUP
+    out["asserted"] = assert_speedup
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seeds", type=int, default=2000, help="Monte-Carlo trials")
@@ -150,6 +235,7 @@ def main(argv=None):
         "paper_exactness": check_paper_exactness(micro),
         "campaigns": run_campaigns(micro),
         "montecarlo": run_montecarlo(micro, n_seeds, assert_speedup=not args.dry_run),
+        "trajectories": run_trajectories(micro, n_seeds, assert_speedup=not args.dry_run),
     }
 
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -173,6 +259,21 @@ def main(argv=None):
             f"  MC[{strat}] mean={mc['mean']} p95={mc['p95']} "
             f"speedup={mc['speedup']}x (loop {mc['python_loop_s']}s vs vec {mc['vectorised_s']}s)"
         )
+    traj = report["trajectories"]
+    for name, per in traj["families"].items():
+        ck = per["central_single"]
+        tails = (
+            f"p5={ck['p5']} p50={ck['p50']} p95={ck['p95']}"
+            if ck["survival_rate"]
+            else f"survival={ck['survival_rate']}"
+        )
+        print(f"  TRAJ[{name:20s}] central_single {tails}")
+    sp = traj["speedup"]
+    print(
+        f"  TRAJ speedup on {sp['family']}: {sp['speedup']}x "
+        f"(engine loop {sp['engine_loop_s']}s vs batched {sp['batched_s']}s), "
+        f"engine_match={traj['engine_match']['exact']}"
+    )
     if not report["paper_exactness"]["all_exact"]:
         return 1
     return 0

@@ -1,16 +1,30 @@
-"""Scenario engine: declarative multi-failure campaigns + vectorised
-Monte-Carlo trials over the closed-form accounting model.
+"""Scenario engine: declarative multi-failure campaigns, the batched
+trajectory kernel, and vectorised Monte-Carlo over BOTH the closed-form
+model and full engine trajectories.
 
-    from repro.scenarios import registry
+    from repro.scenarios import mc_trajectories, registry
     from repro.scenarios.engine import CampaignEngine
 
     spec = registry.get("rack_outage")
-    result = CampaignEngine(spec, approach="hybrid").run()
+    result = CampaignEngine(spec, approach="hybrid").run()   # one trial
+    mc = mc_trajectories(spec, "hybrid", n_seeds=2000)       # all at once
 """
 from repro.scenarios import registry
 from repro.scenarios.engine import CampaignEngine, CampaignResult
-from repro.scenarios.montecarlo import MCParams, mc_totals, python_loop_baseline
+from repro.scenarios.montecarlo import (
+    MCParams,
+    mc_totals,
+    mc_trajectories,
+    python_loop_baseline,
+)
 from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec
+from repro.scenarios.trajectory import (
+    TapeBatch,
+    TrajectoryTape,
+    compile_batch,
+    compile_tape,
+    replay_batch,
+)
 
 
 def __getattr__(name):
@@ -30,7 +44,13 @@ __all__ = [
     "FailureProcessSpec",
     "MCParams",
     "ScenarioSpec",
+    "TapeBatch",
+    "TrajectoryTape",
+    "compile_batch",
+    "compile_tape",
     "mc_totals",
+    "mc_trajectories",
     "python_loop_baseline",
     "registry",
+    "replay_batch",
 ]

@@ -6,7 +6,7 @@ the engine *executes* a scenario: it resolves the approach through the
 ``repro.strategies`` registry, attaches the strategy to a
 :class:`ClusterRuntime` (the strategy places its Agent / VirtualCore /
 HybridUnit — or checkpoint restore state — on every worker host), then
-replays the spec's merged failure stream in time order with
+replays the spec's compiled trajectory tape in time order with
 
   * node blacklisting — a host that exceeds ``max_strikes`` failures (or
     any failure when ``repair_s`` is None) never hosts work again;
@@ -16,9 +16,23 @@ replays the spec's merged failure stream in time order with
   * dynamic cascades — a ``cascade`` event re-targets the host the victim
     migrated TO (unknowable at stream-generation time) and fails it
     ``delay_s`` later, down to ``depth`` levels;
+  * network partitions — ``partition`` processes open/heal cluster cuts on
+    the timeline (``ClusterRuntime.set_partition``); under the
+    ``partition-aware`` placement policy migrations cannot cross the cut
+    and minority components refuse placements (quorum);
   * spare-pool exhaustion — when the placement policy finds no healthy,
     un-blacklisted target the campaign is lost (``survived=False``,
     ``failed_at_s`` records when).
+
+Event resolution is shared with the batched Monte-Carlo path: the
+**trajectory compiler** (:mod:`repro.scenarios.trajectory`) lowers the
+spec's merged stream — cascade chains pre-allocated as parent-linked
+slots, repair delays pre-sampled in schedule order, partition component
+maps resolved per slot — and this engine folds the same tape through the
+*real* runtime objects one trial at a time, while the jnp replay kernel
+folds thousands of tapes at once under ``jax.vmap``. The engine is the
+reference semantics; the kernel is differentially tested against it
+trial-for-trial.
 
 The tick loop is strategy-agnostic: every per-approach decision — how to
 move the work, what a failure costs, what background probing costs — goes
@@ -30,7 +44,6 @@ semantics per strategy are documented on the builtin adapters
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -114,7 +127,9 @@ class CampaignEngine:
         self.micro = micro or measure_micro(profile, n_nodes=spec.n_nodes)
         self.payload_elems = payload_elems
         self.seed = spec.seed if seed is None else seed
-        self.placement = placement
+        # explicit arg wins, then the spec's declared policy, then the
+        # strategy default (nearest-spare)
+        self.placement = placement if placement is not None else spec.placement
 
     # ------------------------------------------------------------------
     def _build(self) -> ClusterRuntime:
@@ -139,19 +154,19 @@ class CampaignEngine:
 
     # ------------------------------------------------------------------
     def run(self) -> CampaignResult:
+        from repro.scenarios.trajectory import compile_tape
+
         spec = self.spec
         rt = self._build()
         strat = self.strategy
-
-        # priority queue so repairs/cascades interleave with the spec stream
-        q: List[tuple] = []
-        seq = 0
-        for ev in spec.events(self.seed):
-            heapq.heappush(q, (ev.t, seq, "fail", ev))
-            seq += 1
+        tape = compile_tape(spec, self.seed)
 
         strikes: Dict[int, int] = {}
-        repair_rng = np.random.default_rng((self.seed, 0x5EED))
+        pending: Dict[int, float] = {}  # host -> repair completion time
+        fired_target: Dict[int, int] = {}  # slot -> where its sub-job landed
+        draw_i = 0  # repair draws consumed in schedule order
+        part_i = 0
+        changes = tape.partition_changes
         res = CampaignResult(
             scenario=spec.name,
             approach=self.approach,
@@ -169,22 +184,49 @@ class CampaignEngine:
             probe_s=0.0,
         )
 
-        while q:
-            t, _, kind, ev = heapq.heappop(q)
+        for j in range(tape.n_slots):
+            t = float(tape.times[j])
             if t >= spec.horizon_s:
                 continue
 
-            if kind == "repair":
-                if rt.provision_spare(ev):
-                    res.n_reprovisioned += 1
-                continue
+            # partition cuts open/heal on the static timeline
+            while part_i < len(changes) and changes[part_i][0] <= t:
+                comp = changes[part_i][1]
+                if comp is None:
+                    rt.heal_partition()
+                else:
+                    rt.set_partition(comp)
+                part_i += 1
 
-            assert isinstance(ev, FailureEvent)
+            # repairs completing strictly before t rejoin the spare pool
+            # in completion order
+            for h, tr in sorted(pending.items(), key=lambda kv: (kv[1], kv[0])):
+                if tr < t:
+                    del pending[h]
+                    if rt.provision_spare(h):
+                        res.n_reprovisioned += 1
+
+            # cascade children chase the host their parent's sub-job
+            # migrated to — and only exist if it migrated at all
+            parent = int(tape.parent[j])
+            if parent >= 0:
+                host = fired_target.get(parent)
+                if host is None:
+                    continue
+            else:
+                host = int(tape.victim[j])
+
             res.n_events += 1
-            host = ev.node
             if not rt.healthy(host):
                 continue  # already down — coalesced with an earlier event
 
+            ev = FailureEvent(
+                t=t,
+                node=host,
+                predictable=bool(tape.predictable[j]),
+                cause=tape.causes[j],
+                during_checkpoint=bool(tape.during_ckpt[j]),
+            )
             strikes[host] = strikes.get(host, 0) + 1
             permanent = spec.repair_s is None or strikes[host] >= spec.max_strikes
 
@@ -194,7 +236,6 @@ class CampaignEngine:
                 rt.heartbeats.mark_degrading(host)
             rt.heartbeats.tick()
 
-            migrated_to: Optional[int] = None
             if strat.has_work(host):
                 # never co-host two sub-jobs: only free targets are eligible
                 target = strat.pick_target(host, require_free=True)
@@ -204,7 +245,7 @@ class CampaignEngine:
                     res.survived = False
                     res.failed_at_s = float(t)
                     res.events.append(
-                        {"t": t, "node": host, "cause": ev.cause, "outcome": "stranded"}
+                        {"t": float(t), "node": host, "cause": ev.cause, "outcome": "stranded"}
                     )
                     break
                 out = (
@@ -218,7 +259,7 @@ class CampaignEngine:
                 res.n_handled += 1
                 if out.migrated:
                     res.n_migrations += 1
-                migrated_to = out.new_host
+                fired_target[j] = int(out.new_host)
                 res.events.append(
                     {
                         "t": float(t),
@@ -234,25 +275,20 @@ class CampaignEngine:
             if permanent:
                 res.n_blacklisted += 1
             elif spec.repair_s is not None:
-                heapq.heappush(q, (t + spec.sample_repair(repair_rng), seq, "repair", host))
-                seq += 1
+                pending[host] = t + float(tape.repair_draws[draw_i])
+                draw_i += 1
 
-            # dynamic cascade: the host the work LANDED on fails next
-            if ev.cascade and ev.cascade.get("depth", 0) > 0 and migrated_to is not None:
-                nxt = FailureEvent(
-                    t=t + float(ev.cascade.get("delay_s", 120.0)),
-                    node=migrated_to,
-                    predictable=ev.predictable,
-                    cause="cascade",
-                    cascade={
-                        "delay_s": float(ev.cascade.get("delay_s", 120.0)),
-                        "depth": int(ev.cascade["depth"]) - 1,
-                    },
-                )
-                heapq.heappush(q, (nxt.t, seq, "fail", nxt))
-                seq += 1
+        if res.survived:
+            # repairs still pending after the last event complete (and are
+            # counted) if they land inside the horizon
+            for h, tr in sorted(pending.items(), key=lambda kv: (kv[1], kv[0])):
+                if tr < spec.horizon_s and rt.provision_spare(h):
+                    res.n_reprovisioned += 1
 
-        res.probe_s = strat.tick_costs() * (spec.horizon_s / 3600.0)
+        # background probing accrues only while the campaign is running —
+        # a lost campaign stops probing at failed_at_s
+        probed_s = spec.horizon_s if res.survived else res.failed_at_s
+        res.probe_s = strat.tick_costs() * (probed_s / 3600.0)
 
         if res.survived:
             res.total_s = (

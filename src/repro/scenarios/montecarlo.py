@@ -1,20 +1,34 @@
-"""Vectorised Monte-Carlo over the closed-form accounting model.
+"""Vectorised Monte-Carlo: closed-form totals AND full engine trajectories.
 
 The paper reports 5000-trial means but the seed simulator runs one trial
-per Python call. Here the closed-form total of ``core/sim.py`` —
+per Python call. Two batched paths live here:
 
-    total = J + probe·hours + Σ_failures (lost + reinstate + overhead)
+``mc_totals``
+    the closed-form total of ``core/sim.py`` —
 
-with the random failure instant uniform within each inter-checkpoint
-window — is evaluated for *thousands of seeds at once* on device via
-``jax.vmap`` over per-seed PRNG keys (one fused, jitted program; no Python
-loop). ``python_loop_baseline`` is the faithful one-trial-per-call
-formulation used to certify the speedup (``bench_scenarios.py`` asserts
-≥ 10×).
+        total = J + probe·hours + Σ_failures (lost + reinstate + overhead)
 
-Only ``kind="random"`` scenarios are stochastic in the closed form;
-periodic scenarios are deterministic, so their "Monte-Carlo" collapses to a
-single evaluation (still supported for uniform reporting).
+    with the random failure instant uniform within each inter-checkpoint
+    window — evaluated for thousands of seeds at once via ``jax.vmap``
+    over per-seed PRNG keys. Only the paper's window patterns reduce to
+    this form; periodic scenarios are deterministic, so their
+    "Monte-Carlo" collapses to a single evaluation.
+    ``python_loop_baseline`` is the faithful one-trial-per-call
+    formulation used as that path's speedup yardstick.
+
+``mc_trajectories``
+    Monte-Carlo over full *engine trajectories*: every scenario family —
+    cascade, rack, flaky, burst, partition, arbitrary compositions — is
+    compiled to padded/masked event tapes
+    (:func:`repro.scenarios.trajectory.compile_batch`) and replayed for
+    all seeds in one jitted, vmapped program
+    (:func:`repro.scenarios.trajectory.replay_batch`), reproducing the
+    Python :class:`CampaignEngine` trial-for-trial — including survival /
+    spare-exhaustion, blacklisting and heavy-tailed repairs — and
+    reporting the recovery-cost *tails* (p5/p50/p95), which is what
+    actually separates reactive from proactive schemes (Treaster,
+    cs/0501002). ``bench_scenarios.py`` certifies ≥ 10× over the
+    per-seed Python engine loop on the ``mc_stress`` family.
 """
 from __future__ import annotations
 
@@ -209,3 +223,64 @@ def params_from_scenario(
         lost_progress=False,
         lead_s=c.predict_s,
     )
+
+
+def mc_trajectories(
+    spec,
+    strategy: str,
+    n_seeds: int = 1000,
+    seed: int = 0,
+    micro=None,
+    profile: str = "placentia",
+    placement: Optional[str] = None,
+    batch=None,
+) -> Dict:
+    """Monte-Carlo over full engine trajectories for ANY scenario family.
+
+    Compiles ``n_seeds`` trials of ``spec`` (a :class:`ScenarioSpec` or a
+    registered name) into one padded tape batch and folds them through
+    the vmapped replay kernel under ``strategy``'s vectorised cost table
+    — one jitted program, no Python loop. Each trial is *exactly* what
+    ``CampaignEngine(spec, strategy, seed=k).run()`` computes.
+
+    Returns summary stats over the surviving trials' totals (NaN when
+    every trial is lost, e.g. ``spare_exhaustion``), the survival rate,
+    mean counters, and the raw per-seed arrays under ``"trials"``. Pass a
+    pre-compiled ``batch`` (:func:`compile_batch`) to amortise tape
+    compilation across strategies."""
+    from repro.scenarios import registry
+    from repro.scenarios.trajectory import compile_batch, replay_batch
+
+    spec = registry.get(spec) if isinstance(spec, str) else spec
+    if batch is None:
+        batch = compile_batch(spec, n_seeds, base_seed=seed)
+    out = replay_batch(
+        spec, batch, strategy, micro=micro, profile=profile, placement=placement
+    )
+    totals = out["total_s"]
+    ok = out["survived"]
+    alive = totals[ok]
+    stat = lambda f, d=np.nan: float(f(alive)) if alive.size else d
+    return {
+        "scenario": spec.name,
+        "strategy": strategy,
+        "n_seeds": int(batch.n_seeds),
+        "survival_rate": float(np.mean(ok)),
+        "mean_s": stat(np.mean),
+        "std_s": stat(np.std),
+        "p5_s": stat(lambda x: np.percentile(x, 5)),
+        "p50_s": stat(lambda x: np.percentile(x, 50)),
+        "p95_s": stat(lambda x: np.percentile(x, 95)),
+        "mean_failed_at_s": float(np.mean(out["failed_at_s"][~ok])) if (~ok).any() else None,
+        "counters": {
+            k: float(np.mean(out[k]))
+            for k in (
+                "n_events",
+                "n_handled",
+                "n_migrations",
+                "n_blacklisted",
+                "n_reprovisioned",
+            )
+        },
+        "trials": out,
+    }

@@ -166,6 +166,65 @@ def _checkpoint_storm() -> ScenarioSpec:
     )
 
 
+def _partition_split() -> ScenarioSpec:
+    """Network partition: a cut isolates rack 1 (the minority component)
+    from minute 25 to minute 75. Under the spec's ``partition-aware``
+    placement, the mid-cut failure on the majority side must be re-placed
+    *within* its component (migrations cannot cross the cut); after the
+    heal, the second failure places freely again."""
+    return ScenarioSpec(
+        name="partition_split",
+        n_nodes=6,
+        n_spares=2,
+        horizon_s=2 * 3600.0,
+        period_s=3600.0,
+        racks={0: 0, 1: 0, 2: 0, 3: 1, 4: 1, 5: 1},
+        processes=[
+            FailureProcessSpec(
+                "partition",
+                {
+                    "t": 1500.0,
+                    "duration_s": 3000.0,
+                    # spares 6-7 sit on the majority side of the cut
+                    "components": {0: 0, 1: 0, 2: 0, 3: 1, 4: 1, 5: 1, 6: 0, 7: 0},
+                },
+            ),
+            FailureProcessSpec(
+                "cascade", {"node": 1, "t": 2400.0, "depth": 0, "predictable": True}
+            ),
+            FailureProcessSpec("cascade", {"node": 3, "t": 5400.0, "depth": 0}),
+        ],
+        repair_s=1200.0,
+        placement="partition-aware",
+        description="cut isolates rack 1 for 50 min; failures mid-cut and post-heal",
+    )
+
+
+def _mc_stress() -> ScenarioSpec:
+    """Monte-Carlo stress family: a 24-node half-day campaign composing
+    per-window random failures, two flaky repeat offenders and a rack
+    outage. Big enough that the batched trajectory kernel's speedup over
+    the per-seed Python engine loop is unambiguous (the benchmark
+    certifies ≥10× on this family)."""
+    return ScenarioSpec(
+        name="mc_stress",
+        n_nodes=24,
+        n_spares=8,
+        horizon_s=12 * 3600.0,
+        period_s=3600.0,
+        racks={i: i // 4 for i in range(24)},
+        processes=[
+            FailureProcessSpec("random", {}),
+            FailureProcessSpec("flaky", {"node": 3, "every_s": 2400.0}),
+            FailureProcessSpec("flaky", {"node": 17, "every_s": 3000.0}),
+            FailureProcessSpec("rack", {"rack": 2, "t": 4 * 3600.0, "spread_s": 120.0}),
+        ],
+        repair_s=1800.0,
+        max_strikes=3,
+        description="24 nodes, 12 h: random + 2 flaky + rack outage composed",
+    )
+
+
 def _multi_window_storm() -> ScenarioSpec:
     """Compound campaign: random per-window failures + a rack outage + a
     flaky node, simultaneously (the 'as many scenarios as you can imagine'
@@ -197,6 +256,8 @@ for _f in (
     _flaky_node,
     _spare_exhaustion,
     _checkpoint_storm,
+    _partition_split,
+    _mc_stress,
     _multi_window_storm,
 ):
     register(_f().name, _f)

@@ -23,6 +23,13 @@ Process kinds
   flaky           one repeat-offender node failing every `every_s`
   ckpt_window     failures timed to land *inside* checkpoint creation
                   (at k*period + epsilon)
+  partition       network cut: opens at `t` and heals at `heal_t` (or
+                  after `duration_s`); emits NO failure events — it
+                  contributes host->component maps to the campaign
+                  timeline (``partition_timeline``), which the engine
+                  applies via ``ClusterRuntime.set_partition`` and the
+                  ``partition-aware`` placement policy honours (quorum:
+                  a minority component refuses placements)
 
 Every process emits plain :class:`repro.core.failure.FailureEvent` records —
 the same event-stream interface the paper's :class:`FailureModel`
@@ -55,6 +62,7 @@ PROCESS_KINDS = (
     "cascade",
     "flaky",
     "ckpt_window",
+    "partition",
 )
 
 
@@ -83,6 +91,10 @@ class ScenarioSpec:
     repair_s: Union[None, float, Tuple[str, float, float]] = None
     max_strikes: int = 3  # failures before a node is blacklisted for good
     predictable_fraction: float = PREDICTABLE_FRACTION
+    # placement policy the campaign runs under (None -> the strategy's
+    # default, nearest-spare). Partition scenarios set "partition-aware"
+    # so migrations respect the cut.
+    placement: Optional[str] = None
     seed: int = 0
     description: str = ""
     # set for the paper's two patterns so sim.py can take the exact
@@ -135,6 +147,35 @@ class ScenarioSpec:
             return {i: i % 2 for i in range(self.n_nodes)}
         return None
 
+    # --------------------------------------------------- partition timeline
+    def partition_timeline(self) -> List[Tuple[float, Optional[Dict[int, int]]]]:
+        """Time-ordered cluster-cut changes from every ``partition`` process:
+        ``[(t, {host: component})]`` when a cut opens, ``(t, None)`` when it
+        heals. Deterministic (no rng), so the trajectory compiler can
+        resolve the active component map per event slot statically.
+
+        ``components`` defaults to one component per rack
+        (``effective_racks``); spare hosts left unmapped share the
+        "unmapped" component (``PartitionAware`` compares via
+        ``dict.get``, so two unmapped hosts are mutually reachable)."""
+        changes: List[Tuple[float, Optional[Dict[int, int]]]] = []
+        for proc in self.processes:
+            if proc.kind != "partition":
+                continue
+            p = proc.params
+            t0 = float(p.get("t", 0.0))
+            comps = p.get("components")
+            if comps is None:
+                comps = self.effective_racks() or {}
+            comps = {int(k): int(v) for k, v in comps.items()}
+            changes.append((t0, comps))
+            heal = p.get("heal_t")
+            if heal is None and p.get("duration_s") is not None:
+                heal = t0 + float(p["duration_s"])
+            if heal is not None:
+                changes.append((float(heal), None))
+        return sorted(changes, key=lambda c: c[0])
+
     # ------------------------------------------------------- event stream
     def events(self, seed: Optional[int] = None) -> List[FailureEvent]:
         """Generate the merged, time-ordered failure stream for one trial."""
@@ -155,6 +196,8 @@ class ScenarioSpec:
         self, proc: FailureProcessSpec, rng: np.random.Generator, base_seed: int, idx: int
     ) -> List[FailureEvent]:
         p = proc.params
+        if proc.kind == "partition":
+            return []  # no failure events: contributes to partition_timeline()
         if proc.kind in ("periodic", "random"):
             # delegate to the paper's FailureModel so the stream is
             # bit-for-bit the seed simulator's (same rng draw order). `idx`

@@ -19,6 +19,7 @@ from repro.strategies.base import (
     CostContext,
     FailureOutcome,
     FaultToleranceStrategy,
+    StrategyCostTable,
     StrategyCosts,
     StrategyRow,
 )
@@ -46,6 +47,7 @@ __all__ = [
     "NearestSpare",
     "PartitionAware",
     "PlacementPolicy",
+    "StrategyCostTable",
     "StrategyCosts",
     "StrategyRow",
     "costmodel",

@@ -59,6 +59,68 @@ class StrategyCosts:
 
 
 @dataclass(frozen=True)
+class StrategyCostTable:
+    """Vectorised (structure-of-arrays-ready) form of :class:`StrategyCosts`
+    for the batched trajectory replay kernel
+    (:mod:`repro.scenarios.trajectory`).
+
+    Where :class:`StrategyCosts` is one closed-form per-failure record,
+    this table carries every coefficient the replay kernel may need to
+    bill an *arbitrary* event under ``jax.vmap`` — including both
+    mechanism pairs for strategies that pick agent vs core migration per
+    event — so the per-event cost is a pure arithmetic function of
+    ``(t, predictable, during_checkpoint, Z)`` with no Python dispatch.
+
+    ``mode`` selects the loss clock:
+
+    ``"window"``
+        reactive: a failure loses the elapsed time since the window
+        start (the checkpoint policies; also the default reduction of a
+        custom reactive strategy's ``costs()``);
+    ``"proactive"``
+        predicted failures lose nothing (lead-window migration); blind
+        failures replay from the window-start progress mark; reinstate/
+        overhead are priced per mechanism;
+    ``"cold"``
+        a failure loses everything since the sub-job's last (re)start
+        (per-host attempt clock).
+    """
+
+    mode: str  # "window" | "proactive" | "cold"
+    proactive: bool = False
+    probe_s_per_hour: float = 0.0
+    predict_s: float = 0.0  # lead paid per *predicted* failure
+    # window/cold-mode scalars
+    reinstate_s: float = 0.0
+    overhead_s: float = 0.0
+    # a failure during checkpoint creation invalidates the in-flight
+    # checkpoint: +1 window of lost progress, +50 % overhead (the live
+    # CheckpointStrategy.on_failure semantics)
+    ckpt_invalidation: bool = False
+    # proactive per-mechanism pairs (overhead already growth-scaled)
+    agent_reinstate_s: float = 0.0
+    agent_overhead_s: float = 0.0
+    core_reinstate_s: float = 0.0
+    core_overhead_s: float = 0.0
+    mechanism: str = "core"  # "agent" | "core" | "rules" (Z-negotiated per event)
+
+    def finite(self) -> bool:
+        return all(
+            np.isfinite(v)
+            for v in (
+                self.predict_s,
+                self.reinstate_s,
+                self.overhead_s,
+                self.probe_s_per_hour,
+                self.agent_reinstate_s,
+                self.agent_overhead_s,
+                self.core_reinstate_s,
+                self.core_overhead_s,
+            )
+        )
+
+
+@dataclass(frozen=True)
 class CostContext:
     """Inputs a strategy needs to price itself: the measured/modelled
     micro-costs plus the experiment geometry (the hybrid's Rules 1-3
@@ -144,6 +206,35 @@ class FaultToleranceStrategy(ABC):
         """Rows outside the per-periodicity grid (``tabulated=False``
         strategies such as cold restart). Default: none."""
         return None
+
+    def cost_table(self, ctx: CostContext) -> StrategyCostTable:
+        """Batched per-event cost coefficients for the trajectory replay
+        kernel (:mod:`repro.scenarios.trajectory`).
+
+        The default reduces the scalar :meth:`costs` record: reactive
+        strategies bill window-clock losses, proactive ones bill the same
+        reinstate/overhead pair for either mechanism. Builtin adapters
+        override to expose their richer live semantics (checkpoint
+        invalidation, per-mechanism pricing, cold-restart clocks) so the
+        kernel reproduces the engine's billing exactly."""
+        c = self.costs(ctx)
+        if self.proactive:
+            return StrategyCostTable(
+                mode="proactive",
+                proactive=True,
+                probe_s_per_hour=self.tick_costs(),
+                predict_s=c.predict_s,
+                agent_reinstate_s=c.reinstate_s,
+                agent_overhead_s=c.overhead_s,
+                core_reinstate_s=c.reinstate_s,
+                core_overhead_s=c.overhead_s,
+            )
+        return StrategyCostTable(
+            mode="window",
+            probe_s_per_hour=self.tick_costs(),
+            reinstate_s=c.reinstate_s,
+            overhead_s=c.overhead_s,
+        )
 
     # ------------------------------------------------------- lifecycle ---
     def attach(self, rt, hosts: Dict[int, object], micro=None, period_s: float = 3600.0):

@@ -26,15 +26,15 @@ from repro.strategies.base import (
     CostContext,
     FailureOutcome,
     FaultToleranceStrategy,
+    StrategyCostTable,
     StrategyCosts,
     StrategyRow,
 )
 from repro.strategies.costmodel import (
     COLD_REINSTATE_S,
     PROBE_S_PER_HOUR,
-    ckpt_overhead_growth,
-    ckpt_reinstate_growth,
-    overhead_growth,
+    checkpoint_costs,
+    proactive_mech_costs,
 )
 from repro.strategies.registry import register
 
@@ -62,6 +62,11 @@ class ColdRestart(FaultToleranceStrategy):
             overhead_s=0.0,
             lost_progress=True,
         )
+
+    def cost_table(self, ctx: CostContext) -> StrategyCostTable:
+        # cold mode: the replay kernel advances a per-host attempt clock
+        # instead of the window clock, matching on_failure below
+        return StrategyCostTable(mode="cold", reinstate_s=COLD_REINSTATE_S)
 
     def table_rows(self, job_hours: float) -> List[StrategyRow]:
         J = job_hours * 3600.0
@@ -115,12 +120,21 @@ class CheckpointStrategy(FaultToleranceStrategy):
     kind: str = "?"
 
     def costs(self, ctx: CostContext) -> StrategyCosts:
-        m = ctx.micro
+        rst, ovh = checkpoint_costs(ctx.micro, self.kind, ctx.period_h)
         return StrategyCosts(
             predict_s=0.0,
-            reinstate_s=m.ckpt_reinstate_s[self.kind] * ckpt_reinstate_growth(ctx.period_h),
-            overhead_s=m.ckpt_overhead_s[self.kind] * ckpt_overhead_growth(ctx.period_h),
+            reinstate_s=rst,
+            overhead_s=ovh,
             lost_progress=True,
+        )
+
+    def cost_table(self, ctx: CostContext) -> StrategyCostTable:
+        rst, ovh = checkpoint_costs(ctx.micro, self.kind, ctx.period_h)
+        return StrategyCostTable(
+            mode="window",
+            reinstate_s=rst,
+            overhead_s=ovh,
+            ckpt_invalidation=True,
         )
 
     def on_failure(self, event, target: int) -> FailureOutcome:
@@ -174,6 +188,7 @@ class ProactiveStrategy(FaultToleranceStrategy):
 
     proactive = True
     probe_mechanism: str = "agent"  # whose background probing is billed
+    replay_mechanism: str = "core"  # batched billing: "agent" | "core" | "rules"
 
     # unit plumbing ------------------------------------------------------
     def _make_unit(self, host: int, payload: object):
@@ -236,20 +251,35 @@ class ProactiveStrategy(FaultToleranceStrategy):
 
     def _mech_costs(self, mechanism: str, period_h: float, micro=None):
         m = self.micro if micro is None else micro
-        ovh_g = overhead_growth(period_h)
-        if mechanism == "agent":
-            return m.agent_reinstate_s, m.agent_overhead_s * ovh_g
-        return m.core_reinstate_s, m.core_overhead_s * ovh_g
+        return proactive_mech_costs(m, mechanism, period_h)
 
     def costs(self, ctx: CostContext) -> StrategyCosts:
         mech = self._cost_mechanism(ctx)
-        rst, ovh = self._mech_costs(mech, ctx.period_h, micro=ctx.micro)
+        rst, ovh = proactive_mech_costs(ctx.micro, mech, ctx.period_h)
         return StrategyCosts(
             predict_s=ctx.micro.predict_s,
             reinstate_s=rst,
             overhead_s=ovh,
             probe_s_per_hour=PROBE_S_PER_HOUR[mech],
             lost_progress=False,
+        )
+
+    def cost_table(self, ctx: CostContext) -> StrategyCostTable:
+        # both mechanism pairs: the kernel bills whichever one each event's
+        # negotiation resolves to (static for agent/core; Rules 1-3 Z-test
+        # per event when replay_mechanism == "rules")
+        a_rst, a_ovh = proactive_mech_costs(ctx.micro, "agent", ctx.period_h)
+        c_rst, c_ovh = proactive_mech_costs(ctx.micro, "core", ctx.period_h)
+        return StrategyCostTable(
+            mode="proactive",
+            proactive=True,
+            probe_s_per_hour=self.tick_costs(),
+            predict_s=ctx.micro.predict_s,
+            agent_reinstate_s=a_rst,
+            agent_overhead_s=a_ovh,
+            core_reinstate_s=c_rst,
+            core_overhead_s=c_ovh,
+            mechanism=self.replay_mechanism,
         )
 
     # handling -----------------------------------------------------------
@@ -289,6 +319,7 @@ class AgentStrategy(ProactiveStrategy):
     """Approach 1 — agent intelligence (software-layer migration)."""
 
     probe_mechanism = "agent"
+    replay_mechanism = "agent"
 
     def _make_unit(self, host: int, payload: object):
         return Agent(host, host, payload, placement=self.placement)
@@ -308,6 +339,7 @@ class CoreStrategy(ProactiveStrategy):
     """Approach 2 — virtual-core intelligence (runtime-level push)."""
 
     probe_mechanism = "core"
+    replay_mechanism = "core"
 
     def _make_unit(self, host: int, payload: object):
         return VirtualCore(host, host, placement=self.placement)
@@ -329,6 +361,7 @@ class HybridStrategy(ProactiveStrategy):
     cheap path; the agent/core split only matters per migration."""
 
     probe_mechanism = "core"
+    replay_mechanism = "rules"
 
     def _make_unit(self, host: int, payload: object):
         return HybridUnit(

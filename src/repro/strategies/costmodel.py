@@ -50,3 +50,25 @@ def ckpt_overhead_growth(period_h: float):
 def ckpt_reinstate_growth(period_h: float):
     """Checkpoint reinstate growth: paper-measured entry, else the curve."""
     return RST_GROWTH.get(period_h, reinstate_growth(period_h))
+
+
+def checkpoint_costs(micro, kind: str, period_h: float):
+    """(reinstate_s, overhead_s) per failure of a checkpoint policy at one
+    periodicity. The single place the table-entry × growth-curve product is
+    written; the scalar ``costs()`` path, the engine's live billing and the
+    batched ``cost_table()`` path all reduce through it."""
+    return (
+        micro.ckpt_reinstate_s[kind] * ckpt_reinstate_growth(period_h),
+        micro.ckpt_overhead_s[kind] * ckpt_overhead_growth(period_h),
+    )
+
+
+def proactive_mech_costs(micro, mechanism: str, period_h: float):
+    """(reinstate_s, overhead_s) per failure of one proactive *mechanism*
+    (``"agent"`` or ``"core"``). The hybrid strategy bills whichever
+    mechanism its Rules 1-3 negotiation picks per event, so both pairs are
+    needed by the batched replay kernel."""
+    ovh_g = overhead_growth(period_h)
+    if mechanism == "agent":
+        return micro.agent_reinstate_s, micro.agent_overhead_s * ovh_g
+    return micro.core_reinstate_s, micro.core_overhead_s * ovh_g
