@@ -89,6 +89,20 @@ class HeartbeatService:
         self.latency_ewma = np.zeros(n_nodes, np.float32)
         self.racks: Dict[int, int] = racks or {}  # node -> rack id
 
+    def add_node(self, rack: Optional[int] = None) -> int:
+        """Grow the service with the cluster: a newly provisioned host
+        joins the heartbeat ring with a fresh health record, an empty log
+        and a zeroed latency EWMA (``ClusterRuntime.provision_spare``
+        calls this when it provisions a host id beyond the original n)."""
+        i = self.n
+        self.n += 1
+        self.health[i] = NodeHealth(i)
+        self.logs[i] = []
+        self.latency_ewma = np.append(self.latency_ewma, np.float32(0.0))
+        if rack is not None:
+            self.racks[i] = int(rack)
+        return i
+
     def neighbours(self, i: int):
         return [(i - 1) % self.n, (i + 1) % self.n]
 

@@ -95,6 +95,13 @@ class FailurePredictor:
         xn = (features - self.mu) / self.sd
         return float(jax.nn.sigmoid(_logit(self.params, jnp.asarray(xn))))
 
+    def score_many(self, features: np.ndarray) -> np.ndarray:
+        """Batched :meth:`score`: one jitted sigmoid over ``[n, F]`` rows
+        (the detector tape path scores every event slot at once)."""
+        x = np.asarray(features, np.float32).reshape(-1, len(self.mu))
+        xn = (x - self.mu) / self.sd
+        return np.asarray(jax.nn.sigmoid(_logit(self.params, jnp.asarray(xn))))
+
     def predict(self, features: np.ndarray) -> bool:
         return self.score(features) >= self.threshold
 

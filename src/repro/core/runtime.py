@@ -107,9 +107,19 @@ class ClusterRuntime:
             self.spares.remove(hid)
 
     def provision_spare(self, hid: int) -> bool:
-        """Return a repaired host to the spare pool (unless blacklisted)."""
+        """Return a repaired host to the spare pool (unless blacklisted).
+
+        Also accepts a brand-new host id: the cluster grows, and the
+        heartbeat ring / latency EWMA / health logs grow with it
+        (``HeartbeatService.add_node``) instead of staying sized at the
+        original n."""
         if hid in self.blacklist:
             return False
+        while self.heartbeats.n <= hid:
+            # every grown ring slot gets a matching VirtualHost, so a gap
+            # id never leaves phantom heartbeat nodes without hosts
+            new = self.heartbeats.add_node()
+            self.hosts.setdefault(new, VirtualHost(new))
         self.heartbeats.revive(hid)
         h = self.hosts[hid]
         h.shard = None

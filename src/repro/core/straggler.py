@@ -20,13 +20,17 @@ class StragglerDetector:
     alpha: float = 0.2
     z_threshold: float = 2.5
     warmup: int = 8
-    mean: np.ndarray = None
-    var: np.ndarray = None
+    mean: Optional[np.ndarray] = field(default=None)
+    var: Optional[np.ndarray] = field(default=None)
     count: int = 0
 
     def __post_init__(self):
-        self.mean = np.zeros(self.n_hosts)
-        self.var = np.ones(self.n_hosts) * 1e-6
+        # init only when unset, so dataclasses.replace() carries the EWMA
+        # state over instead of silently resetting it
+        if self.mean is None:
+            self.mean = np.zeros(self.n_hosts)
+        if self.var is None:
+            self.var = np.ones(self.n_hosts) * 1e-6
 
     def observe(self, latencies: np.ndarray) -> List[int]:
         """Update with per-host step latencies; return flagged hosts."""
@@ -52,6 +56,10 @@ def mitigate(
         return out
     for s in stragglers:
         take = int(out[s] * factor)
+        if take == 0 and out[s] > 0 and factor > 0:
+            # small shards must still shed work: int() rounding to 0 left
+            # the straggler pacing the whole step
+            take = 1
         out[s] -= take
         for j, h in enumerate(healthy):
             out[h] += take // len(healthy) + (1 if j < take % len(healthy) else 0)

@@ -32,12 +32,14 @@ import numpy as np
 
 from repro.core.checkpoint import AsyncCheckpointer, CheckpointStore
 from repro.core.elastic import replan, reshard_batch
-from repro.core.failure import FailureEvent, PREDICTION_PRECISION
+from repro.core.failure import FailureEvent, PREDICTION_LEAD_S, PREDICTION_PRECISION
 from repro.core.predictor import FailurePredictor
 from repro.core.runtime import ClusterRuntime
-from repro.core.straggler import StragglerDetector, mitigate
+from repro.core.straggler import mitigate
 from repro.strategies.placement import get_placement
 from repro.strategies.registry import get as get_strategy
+from repro.telemetry import CompositeDetector, EWMAStragglerDetector, frame_from_heartbeats
+from repro.telemetry import registry as telemetry_registry
 from repro.utils.tree import tree_hash
 
 
@@ -76,6 +78,7 @@ class FTTrainer:
         profile: str = "tpu_pod",
         seed: int = 0,
         placement: str = "nearest-spare",
+        detector: str = "oracle",  # any registered telemetry detector
     ):
         self.train_step = jax.jit(train_step)
         self.init_state = init_state
@@ -116,7 +119,15 @@ class FTTrainer:
         # straggler detector rebalances it; elastic shrink re-plans it)
         self.n_hosts = n_hosts
         self.per_host_batch = [1] * n_hosts
-        self.straggler = StragglerDetector(n_hosts=n_hosts + 2)
+        # observation runs through the unified detector API: the named
+        # failure detector (oracle = the pre-refactor schedule/false-alarm
+        # semantics, "ml" = inference on the live health logs) composed
+        # with the EWMA straggler detector over step latencies
+        self.detector_name = detector
+        self._straggler = EWMAStragglerDetector(n_hosts=n_hosts + 2)
+        self.detector = CompositeDetector(
+            [telemetry_registry.get(detector), self._straggler]
+        ).bind(self.rt)
         self.egress = None
         if speculative:
             from repro.core.speculative import SpeculativeEgress
@@ -148,14 +159,49 @@ class FTTrainer:
 
             # --- proactive window: predicted failures + false positives ----
             if self._proactive:
-                # real probe of the supervised host
-                self.rt.heartbeats.tick()
-                # straggler mitigation: flag hosts whose heartbeat latency
-                # drifts, shift their batch share to the healthy ones
-                flagged = self.straggler.observe(
-                    np.asarray(self.rt.heartbeats.latency_ewma, dtype=float)
+                home_mod = self.home % self.rt.n_active
+                # ground truth: the oracle side channel only — inference
+                # detectors never see these flags, they read the telemetry
+                imminent = (
+                    fi < len(fq)
+                    and fq[fi].predictable
+                    and now >= fq[fi].t - fq[fi].lead_s
+                    and fq[fi].node == home_mod
                 )
-                flagged = [h for h in flagged if h < self.n_hosts]
+                false_alarm = self.rng.random() < (
+                    0.002 * (1 - PREDICTION_PRECISION) / PREDICTION_PRECISION
+                )
+                if self.detector_name != "oracle":
+                    # generative signal: a node emits a degrading signature
+                    # through the lead window before a *predictable*
+                    # failure — the signal inference detectors learn from
+                    # (gated so the oracle path's telemetry draws stay
+                    # byte-identical to the pre-detector-API trainer)
+                    if (
+                        fi < len(fq)
+                        and fq[fi].predictable
+                        and now >= fq[fi].t - fq[fi].lead_s
+                    ):
+                        self.rt.heartbeats.mark_degrading(fq[fi].node)
+                # real probe of the supervised cluster -> one frame
+                feats = self.rt.heartbeats.tick()
+                frame = frame_from_heartbeats(
+                    self.rt.heartbeats,
+                    now,
+                    features=feats,
+                    oracle={
+                        "node": home_mod,
+                        "imminent": imminent,
+                        "false_alarm": false_alarm,
+                        "lead_s": fq[fi].lead_s if fi < len(fq) else PREDICTION_LEAD_S,
+                    },
+                )
+                verdicts = self.detector.observe(now, frame)
+                # straggler verdicts: flag hosts whose heartbeat latency
+                # drifts, shift their batch share to the healthy ones
+                flagged = sorted(
+                    {v.node for v in verdicts if v.kind == "straggler" and v.node < self.n_hosts}
+                )
                 if flagged:
                     new_split = mitigate(self.per_host_batch, flagged)
                     if new_split != self.per_host_batch:
@@ -164,14 +210,8 @@ class FTTrainer:
                         rep.events.append(
                             {"t": now, "kind": "straggler_rebalance", "hosts": flagged}
                         )
-                imminent = (
-                    fi < len(fq)
-                    and fq[fi].predictable
-                    and now >= fq[fi].t - fq[fi].lead_s
-                    and fq[fi].node == self.home % self.rt.n_active
-                )
-                false_alarm = self.rng.random() < (
-                    0.002 * (1 - PREDICTION_PRECISION) / PREDICTION_PRECISION
+                predicted = any(
+                    v.kind == "failure_predicted" and v.node == home_mod for v in verdicts
                 )
                 if self.egress is not None:
                     # warning band = failure within 3x the lead window, or a
@@ -189,7 +229,7 @@ class FTTrainer:
                             rep.events.append(
                                 {"t": now, "kind": "speculative_stage", **srep}
                             )
-                if imminent or false_alarm:
+                if predicted:
                     t0 = time.perf_counter()
                     if self.egress is not None and self.egress.staged is not None:
                         mrep = self.egress.migrate_prestaged(

@@ -17,7 +17,7 @@ from repro.scenarios.montecarlo import (
     mc_trajectories,
     python_loop_baseline,
 )
-from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec
+from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec, degrade_slowdown_s
 from repro.scenarios.trajectory import (
     TapeBatch,
     TrajectoryTape,
@@ -48,6 +48,7 @@ __all__ = [
     "TrajectoryTape",
     "compile_batch",
     "compile_tape",
+    "degrade_slowdown_s",
     "mc_totals",
     "mc_trajectories",
     "python_loop_baseline",

@@ -41,6 +41,19 @@ protocol (``on_prediction`` / ``on_failure`` / ``tick_costs``), so a
 strategy registered anywhere immediately runs in campaigns.  Accounting
 semantics per strategy are documented on the builtin adapters
 (:mod:`repro.strategies.builtin`).
+
+It is detector-agnostic too: *whether* an event counts as predicted is no
+longer read off the oracle ``ev.predictable`` bit but routed through a
+registered :class:`~repro.telemetry.detector.Detector` — the detector's
+pre-sampled verdict tape (per-event draws in schedule order, the same
+idiom as repair draws) decides ``on_prediction`` vs ``on_failure``, and
+the identical tape feeds the batched replay kernel, so engine and kernel
+stay trial-for-trial interchangeable under any detector. The default
+``"oracle"`` detector reproduces the pre-refactor semantics bit-for-bit.
+``degrade`` windows (a node slows its shard instead of dying) are billed
+as extra synchronous-step time (:func:`~repro.scenarios.spec.
+degrade_slowdown_s`); a straggler-flagging detector mitigates them by
+rebalancing work off the slow shard.
 """
 from __future__ import annotations
 
@@ -53,8 +66,10 @@ from repro.core.failure import FailureEvent
 from repro.core.migration import DependencyGraph
 from repro.core.runtime import ClusterRuntime
 from repro.core.sim import MicroCosts, measure_micro
-from repro.scenarios.spec import ScenarioSpec
+from repro.scenarios.spec import ScenarioSpec, degrade_slowdown_s
 from repro.strategies import registry as strategy_registry
+from repro.telemetry import registry as detector_registry
+from repro.telemetry.detector import Detector
 
 
 def __getattr__(name):
@@ -81,10 +96,12 @@ class CampaignResult:
     reinstate_s: float
     overhead_s: float
     probe_s: float
+    slowdown_s: float = 0.0  # degrade windows: extra synchronous-step time
+    detector: str = "oracle"
     events: List[Dict] = field(default_factory=list)
 
     def to_dict(self) -> Dict:
-        return {
+        d = {
             "scenario": self.scenario,
             "approach": self.approach,
             "survived": self.survived,
@@ -100,6 +117,13 @@ class CampaignResult:
             "overhead_s": round(self.overhead_s, 3),
             "probe_s": round(self.probe_s, 3),
         }
+        # appended only when active, keeping the oracle campaign records
+        # byte-identical to their pre-detector-API form
+        if self.slowdown_s:
+            d["slowdown_s"] = round(self.slowdown_s, 3)
+        if self.detector != "oracle":
+            d["detector"] = self.detector
+        return d
 
 
 class CampaignEngine:
@@ -114,6 +138,7 @@ class CampaignEngine:
         payload_elems: int = 1 << 10,
         seed: Optional[int] = None,
         placement: Optional[str] = None,
+        detector: "str | Detector" = "oracle",
     ):
         try:
             cls = strategy_registry.get_class(approach)
@@ -130,6 +155,11 @@ class CampaignEngine:
         # explicit arg wins, then the spec's declared policy, then the
         # strategy default (nearest-spare)
         self.placement = placement if placement is not None else spec.placement
+        # which events count as predicted is the detector's call — the
+        # oracle default reproduces the ev.predictable branch bit-for-bit
+        self.detector = (
+            detector if isinstance(detector, Detector) else detector_registry.get(detector)
+        )
 
     # ------------------------------------------------------------------
     def _build(self) -> ClusterRuntime:
@@ -160,6 +190,17 @@ class CampaignEngine:
         rt = self._build()
         strat = self.strategy
         tape = compile_tape(spec, self.seed)
+        # per-event detector draws, pre-sampled in schedule order (exactly
+        # like repair draws) — the replay kernel consumes the same tape
+        self.detector.bind(rt)
+        verdicts, _leads = self.detector.verdict_tape(
+            spec,
+            times=tape.times,
+            predictable=tape.predictable,
+            rack_corr=tape.rack_corr,
+            seed=self.seed,
+        )
+        oracle = self.detector.name == "oracle"
 
         strikes: Dict[int, int] = {}
         pending: Dict[int, float] = {}  # host -> repair completion time
@@ -182,6 +223,7 @@ class CampaignEngine:
             reinstate_s=0.0,
             overhead_s=0.0,
             probe_s=0.0,
+            detector=self.detector.name,
         )
 
         for j in range(tape.n_slots):
@@ -248,28 +290,44 @@ class CampaignEngine:
                         {"t": float(t), "node": host, "cause": ev.cause, "outcome": "stranded"}
                     )
                     break
+                # the detector's verdict — not the oracle bit — decides
+                # whether the strategy ACTS on a lead window; but a lead
+                # window only exists if the node really emitted a degrading
+                # signature (ev.predictable). A true positive migrates
+                # ahead of the failure; a false claim on a no-signature
+                # failure is handled blind AND pays the wasted prediction
+                # work (the Fig 15c instability cost) — so a noisy
+                # detector can never beat the oracle
+                predicted = bool(verdicts[j])
+                saved = predicted and ev.predictable
                 out = (
                     strat.on_prediction(ev, target)
-                    if ev.predictable and strat.proactive
+                    if saved and strat.proactive
                     else strat.on_failure(ev, target)
                 )
+                false_claim_s = (
+                    self.micro.predict_s
+                    if predicted and not saved and strat.proactive
+                    else 0.0
+                )
                 res.lost_s += out.lost_s
-                res.reinstate_s += out.reinstate_s
+                res.reinstate_s += out.reinstate_s + false_claim_s
                 res.overhead_s += out.overhead_s
                 res.n_handled += 1
                 if out.migrated:
                     res.n_migrations += 1
                 fired_target[j] = int(out.new_host)
-                res.events.append(
-                    {
-                        "t": float(t),
-                        "node": host,
-                        "to": int(out.new_host),
-                        "cause": ev.cause,
-                        "predictable": bool(ev.predictable),
-                        "outcome": out.outcome,
-                    }
-                )
+                rec = {
+                    "t": float(t),
+                    "node": host,
+                    "to": int(out.new_host),
+                    "cause": ev.cause,
+                    "predictable": bool(ev.predictable),
+                    "outcome": out.outcome,
+                }
+                if not oracle:  # ground truth vs the detector's claim
+                    rec["predicted"] = predicted
+                res.events.append(rec)
 
             rt.fail(host, permanent=permanent)
             if permanent:
@@ -290,8 +348,19 @@ class CampaignEngine:
         probed_s = spec.horizon_s if res.survived else res.failed_at_s
         res.probe_s = strat.tick_costs() * (probed_s / 3600.0)
 
+        # degrade windows: the slow shard paces every synchronous step; a
+        # straggler-flagging detector rebalances work off it part-way in
+        res.slowdown_s = degrade_slowdown_s(
+            spec, mitigate_stragglers=self.detector.flags_stragglers
+        )
+
         if res.survived:
             res.total_s = (
-                spec.horizon_s + res.lost_s + res.reinstate_s + res.overhead_s + res.probe_s
+                spec.horizon_s
+                + res.lost_s
+                + res.reinstate_s
+                + res.overhead_s
+                + res.probe_s
+                + res.slowdown_s
             )
         return res

@@ -28,7 +28,10 @@ per Python call. Two batched paths live here:
     reporting the recovery-cost *tails* (p5/p50/p95), which is what
     actually separates reactive from proactive schemes (Treaster,
     cs/0501002). ``bench_scenarios.py`` certifies ≥ 10× over the
-    per-seed Python engine loop on the ``mc_stress`` family.
+    per-seed Python engine loop on the ``mc_stress`` family. The
+    ``detector`` argument swaps the oracle ``predictable`` bits for a
+    registered detector's pre-sampled verdict tape (e.g. ``"ml"``), so
+    detection quality is Monte-Carlo-able too.
 """
 from __future__ import annotations
 
@@ -234,6 +237,7 @@ def mc_trajectories(
     profile: str = "placentia",
     placement: Optional[str] = None,
     batch=None,
+    detector="oracle",
 ) -> Dict:
     """Monte-Carlo over full engine trajectories for ANY scenario family.
 
@@ -255,7 +259,13 @@ def mc_trajectories(
     if batch is None:
         batch = compile_batch(spec, n_seeds, base_seed=seed)
     out = replay_batch(
-        spec, batch, strategy, micro=micro, profile=profile, placement=placement
+        spec,
+        batch,
+        strategy,
+        micro=micro,
+        profile=profile,
+        placement=placement,
+        detector=detector,
     )
     totals = out["total_s"]
     ok = out["survived"]

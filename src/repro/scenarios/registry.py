@@ -225,6 +225,31 @@ def _mc_stress() -> ScenarioSpec:
     )
 
 
+def _straggler_drift() -> ScenarioSpec:
+    """Stragglers under failure: node 2 degrades to 40 % speed over a
+    10-minute ramp and stays slow for 90 minutes — alive, so it keeps its
+    shard and paces every synchronous step — while per-window random
+    failures continue. Under a straggler-flagging detector
+    (``detector="ewma_straggler"``) the engine rebalances work off the
+    slow shard part-way into the window, shrinking the slowdown bill."""
+    return ScenarioSpec(
+        name="straggler_drift",
+        n_nodes=6,
+        n_spares=2,
+        horizon_s=3 * 3600.0,
+        period_s=3600.0,
+        processes=[
+            FailureProcessSpec("random", {}),
+            FailureProcessSpec(
+                "degrade",
+                {"node": 2, "t": 1800.0, "duration_s": 5400.0, "factor": 0.4, "ramp_s": 600.0},
+            ),
+        ],
+        repair_s=1200.0,
+        description="degrading-but-alive node slows its shard while failures continue",
+    )
+
+
 def _multi_window_storm() -> ScenarioSpec:
     """Compound campaign: random per-window failures + a rack outage + a
     flaky node, simultaneously (the 'as many scenarios as you can imagine'
@@ -257,6 +282,7 @@ for _f in (
     _spare_exhaustion,
     _checkpoint_storm,
     _partition_split,
+    _straggler_drift,
     _mc_stress,
     _multi_window_storm,
 ):

@@ -30,6 +30,16 @@ Process kinds
                   applies via ``ClusterRuntime.set_partition`` and the
                   ``partition-aware`` placement policy honours (quorum:
                   a minority component refuses placements)
+  degrade         degrading-but-alive node: from `t` its relative speed
+                  ramps down over `ramp_s` to `factor` and stays there
+                  for `duration_s` — the node slows its shard instead of
+                  dying. Emits NO failure events; it contributes slowdown
+                  windows (``degrade_timeline``), which the engine and
+                  the replay kernel account as extra synchronous-step
+                  time (``degrade_slowdown_s`` via
+                  ``core.straggler.sync_step_time``). Campaigns run under
+                  a straggler-flagging detector mitigate the window by
+                  rebalancing work off the slow shard.
 
 Every process emits plain :class:`repro.core.failure.FailureEvent` records —
 the same event-stream interface the paper's :class:`FailureModel`
@@ -63,6 +73,7 @@ PROCESS_KINDS = (
     "flaky",
     "ckpt_window",
     "partition",
+    "degrade",
 )
 
 
@@ -176,6 +187,31 @@ class ScenarioSpec:
                 changes.append((float(heal), None))
         return sorted(changes, key=lambda c: c[0])
 
+    # ---------------------------------------------------- degrade timeline
+    def degrade_timeline(self) -> List[Tuple[float, float, int, float, float]]:
+        """Slowdown windows from every ``degrade`` process:
+        ``[(t0, t1, node, factor, ramp_s)]``, horizon-clipped and time-
+        ordered. ``factor`` is the node's relative speed at full
+        degradation (0 < factor <= 1); the ramp is linear over ``ramp_s``
+        seconds from t0. Deterministic (no rng), so the engine and the
+        batched replay path account the identical windows."""
+        out: List[Tuple[float, float, int, float, float]] = []
+        for proc in self.processes:
+            if proc.kind != "degrade":
+                continue
+            p = proc.params
+            t0 = float(p.get("t", 0.0))
+            t1 = t0 + float(p.get("duration_s", self.horizon_s - t0))
+            t1 = min(t1, self.horizon_s)
+            factor = float(p.get("factor", 0.5))
+            if not 0.0 < factor <= 1.0:
+                raise ValueError(f"degrade factor must be in (0, 1], got {factor}")
+            if t1 > t0:
+                out.append(
+                    (t0, t1, int(p.get("node", 0)), factor, float(p.get("ramp_s", 0.0)))
+                )
+        return sorted(out, key=lambda w: w[0])
+
     # ------------------------------------------------------- event stream
     def events(self, seed: Optional[int] = None) -> List[FailureEvent]:
         """Generate the merged, time-ordered failure stream for one trial."""
@@ -198,6 +234,8 @@ class ScenarioSpec:
         p = proc.params
         if proc.kind == "partition":
             return []  # no failure events: contributes to partition_timeline()
+        if proc.kind == "degrade":
+            return []  # no failure events: contributes to degrade_timeline()
         if proc.kind in ("periodic", "random"):
             # delegate to the paper's FailureModel so the stream is
             # bit-for-bit the seed simulator's (same rng draw order). `idx`
@@ -309,3 +347,53 @@ class ScenarioSpec:
             ]
 
         raise ValueError(proc.kind)  # unreachable: __post_init__ validates
+
+
+def degrade_slowdown_s(
+    spec: "ScenarioSpec",
+    mitigate_stragglers: bool = False,
+    mitigate_after_s: float = 120.0,
+    mitigate_factor: float = 0.5,
+    dt_s: float = 30.0,
+    shard_units: int = 8,
+) -> float:
+    """Extra synchronous-step seconds a campaign pays for its ``degrade``
+    windows — the engine accounting for slowdown (not just loss).
+
+    In an SPMD step the slowest host sets the pace: with uniform shards
+    the step-time multiplier is ``sync_step_time(split, speeds)`` where
+    the degraded node's speed ramps from 1 down to ``factor``. The extra
+    time is the integral of ``multiplier - 1`` over each window (midpoint
+    rule on a ``dt_s`` grid — deterministic, so the Python engine and the
+    batched replay path bill the identical amount).
+
+    ``mitigate_stragglers=True`` (a straggler-flagging detector is
+    driving the campaign): from ``mitigate_after_s`` into the window the
+    flagged node's shard is rebalanced off it
+    (:func:`repro.core.straggler.mitigate`), shrinking the multiplier —
+    detection quality visibly buys step time."""
+    from repro.core.straggler import mitigate, sync_step_time
+
+    windows = spec.degrade_timeline()
+    if not windows:
+        return 0.0
+    n = spec.n_nodes
+    base = [shard_units] * n
+    extra = 0.0
+    for t0, t1, node, factor, ramp_s in windows:
+        if not 0 <= node < n:
+            raise ValueError(f"degrade node {node} outside 0..{n - 1}")
+        mitigated = (
+            mitigate(base, [node], factor=mitigate_factor) if mitigate_stragglers else base
+        )
+        t = t0
+        while t < t1:
+            step = min(dt_s, t1 - t)
+            tm = t + 0.5 * step  # midpoint
+            frac = 1.0 if ramp_s <= 0 else min(1.0, (tm - t0) / ramp_s)
+            speeds = np.ones(n)
+            speeds[node] = 1.0 - (1.0 - factor) * frac
+            split = mitigated if (mitigate_stragglers and tm >= t0 + mitigate_after_s) else base
+            extra += (sync_step_time(split, speeds) - 1.0) * step
+            t += step
+    return float(extra)

@@ -87,10 +87,13 @@ class TrajectoryTape:
     during_ckpt: np.ndarray  # bool [n]
     repair_draws: np.ndarray  # float64 [n], consumed in schedule order
     causes: List[str] = field(default_factory=list)
+    # rack-correlated slots (cause == "rack"): detector verdict tapes use
+    # this to apply correlated telemetry drift per event
+    rack_corr: Optional[np.ndarray] = None  # bool [n]
     # static partition state per slot: component id per host (-1 unmapped)
     # and whether any cut is open at the slot's time
-    part_active: np.ndarray = None  # bool [n]
-    part_comp: np.ndarray = None  # int32 [n, H]
+    part_active: Optional[np.ndarray] = None  # bool [n]
+    part_comp: Optional[np.ndarray] = None  # int32 [n, H]
     # engine-facing form of the same timeline: [(t, comp_map-or-None)]
     partition_changes: List[Tuple[float, Optional[Dict[int, int]]]] = field(
         default_factory=list
@@ -196,6 +199,7 @@ def compile_tape(spec: ScenarioSpec, seed: Optional[int] = None) -> TrajectoryTa
         during_ckpt=du_arr,
         repair_draws=draws,
         causes=causes,
+        rack_corr=np.asarray([c == "rack" for c in causes], bool),
         part_active=part_active,
         part_comp=part_comp,
         partition_changes=changes,
@@ -217,6 +221,7 @@ class TapeBatch:
     during_ckpt: np.ndarray  # bool [S, n]
     valid: np.ndarray  # bool [S, n]
     repair_draws: np.ndarray  # float64 [S, n]
+    rack_corr: np.ndarray  # bool [S, n]
     part_active: np.ndarray  # bool [S, n]
     part_comp: np.ndarray  # int32 [S, n, H]
 
@@ -249,6 +254,7 @@ def compile_batch(
     during = np.zeros((S, n), bool)
     valid = np.zeros((S, n), bool)
     draws = np.zeros((S, n), np.float64)
+    rcorr = np.zeros((S, n), bool)
     p_act = np.zeros((S, n), bool)
     p_comp = np.full((S, n, H), -1, np.int32)
     for s, tp in enumerate(tapes):
@@ -260,6 +266,7 @@ def compile_batch(
         during[s, :k] = tp.during_ckpt
         valid[s, :k] = True
         draws[s, :k] = tp.repair_draws
+        rcorr[s, :k] = tp.rack_corr
         p_act[s, :k] = tp.part_active
         p_comp[s, :k] = tp.part_comp
 
@@ -274,6 +281,7 @@ def compile_batch(
         during_ckpt=during,
         valid=valid,
         repair_draws=draws,
+        rack_corr=rcorr,
         part_active=p_act,
         part_comp=p_comp,
     )
@@ -322,7 +330,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
         deg0[: static.n_workers - 1] = 1
         deg0[static.n_workers - 1] = static.n_workers - 1
 
-    def one_seed(times, victim0, parent, pred, during, valid, draws, p_act, p_comp):
+    def one_seed(times, victim0, parent, pred, verd, during, valid, draws, p_act, p_comp):
         init = dict(
             down=jnp.zeros(H, bool),
             repair_at=jnp.full(H, jnp.inf),
@@ -354,7 +362,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
         )
 
         def step(c, x):
-            j, t, v0, par, prd, dur, ok, pa, comp = x
+            j, t, v0, par, prd, vrd, dur, ok, pa, comp = x
             live = ok & c["alive"]
 
             # -- repairs completing strictly before t rejoin the spare
@@ -446,8 +454,11 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
                         is_agent = jnp.asarray(False)
                 rst_m = jnp.where(is_agent, table.agent_reinstate_s, table.core_reinstate_s)
                 ovh_ev = jnp.where(is_agent, table.agent_overhead_s, table.core_overhead_s)
-                lost_ev = jnp.where(prd, 0.0, t - wstart)
-                rst_ev = rst_m + jnp.where(prd, table.predict_s, 0.0)
+                # a failure is only *saved* when the detector claimed it AND
+                # a real lead window existed (ground-truth signature); every
+                # claim — true or false — pays the prediction work
+                lost_ev = jnp.where(vrd & prd, 0.0, t - wstart)
+                rst_ev = rst_m + jnp.where(vrd, table.predict_s, 0.0)
             else:  # "cold": lose everything since the sub-job's last start
                 lost_ev = t - c["attempt"][v]
                 rst_ev = jnp.asarray(table.reinstate_s)
@@ -523,6 +534,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             victim0,
             parent,
             pred,
+            verd,
             during,
             valid,
             p_act,
@@ -588,11 +600,20 @@ def replay_batch(
     profile: str = "placentia",
     placement: Optional[str] = None,
     payload_elems: int = 1 << 10,
+    detector="oracle",
 ) -> Dict[str, np.ndarray]:
     """Replay a compiled :class:`TapeBatch` under one strategy's cost table.
 
     ``strategy`` is a registered name (aliases ok) or a strategy
-    instance. Returns per-seed numpy arrays keyed like
+    instance; ``detector`` likewise (a :class:`~repro.telemetry.detector.
+    Detector` name or instance). Per-event verdict tapes are pre-sampled
+    per seed in schedule order — the exact draws the Python engine makes —
+    and fed to the kernel alongside the ground-truth ``predictable`` bits
+    (a failure is *saved* only when claimed AND a real lead window
+    existed; every claim pays the prediction work), so the replay stays
+    trial-for-trial identical to
+    ``CampaignEngine(spec, strategy, seed=k, detector=...)`` under any
+    detector. Returns per-seed numpy arrays keyed like
     :class:`~repro.scenarios.engine.CampaignResult` fields (``total_s`` /
     ``failed_at_s`` are NaN where inapplicable). One jitted vmapped
     program evaluates every seed; programs are cached per
@@ -601,13 +622,30 @@ def replay_batch(
     import jax
     from jax.experimental import enable_x64
 
+    from repro.telemetry import registry as detector_registry
+    from repro.telemetry.detector import Detector
+    from repro.scenarios.spec import degrade_slowdown_s
+
     if isinstance(strategy, FaultToleranceStrategy):
         strat = strategy
     else:
         strat = strategy_registry.get(strategy)
+    det = detector if isinstance(detector, Detector) else detector_registry.get(detector)
     if micro is None:
         micro = _default_micro(profile, spec.n_nodes)
     table = strat.cost_table(CostContext(micro=micro, period_h=spec.period_s / 3600.0))
+
+    # per-seed verdict tapes (the oracle's is the predictable bits verbatim)
+    verdicts = np.zeros_like(batch.predictable)
+    for s in range(batch.n_seeds):
+        v, _ = det.verdict_tape(
+            spec,
+            times=batch.times[s],
+            predictable=batch.predictable[s],
+            rack_corr=batch.rack_corr[s],
+            seed=int(batch.seeds[s]),
+        )
+        verdicts[s] = v
 
     placement = placement or spec.placement or "nearest-spare"
     if placement not in ("nearest-spare", "partition-aware"):
@@ -635,6 +673,7 @@ def replay_batch(
             batch.victim,
             batch.parent,
             batch.predictable,
+            verdicts,
             batch.during_ckpt,
             batch.valid,
             batch.repair_draws,
@@ -642,4 +681,12 @@ def replay_batch(
             batch.part_comp,
         )
         out = jax.block_until_ready(out)
-    return {k: np.asarray(v) for k, v in out.items()}
+    out = {k: np.asarray(v) for k, v in out.items()}
+
+    # degrade windows bill identically to the engine: a deterministic
+    # extra-step-time scalar per campaign (NaN totals stay NaN)
+    slow = degrade_slowdown_s(spec, mitigate_stragglers=det.flags_stragglers)
+    if slow:
+        out["total_s"] = out["total_s"] + slow
+    out["slowdown_s"] = np.full(batch.n_seeds, slow, np.float64)
+    return out

@@ -1,0 +1,54 @@
+"""Unified telemetry & detection: frames in, verdicts out.
+
+    from repro.telemetry import TelemetryFrame, Verdict, registry
+
+    det = registry.get("ml")
+    verdicts = det.observe(t, frame)                 # live
+    pred, lead = det.verdict_tape(spec, ...)         # compiled campaigns
+
+The observation-side twin of ``repro.strategies``: detectors are
+registered once and immediately drivable by the scenario engine
+(``CampaignEngine(spec, approach, detector="ml")``), the live trainer
+(``FTTrainer(..., detector="ml")``), the batched Monte-Carlo
+(``mc_trajectories(spec, strat, detector="ml")``) and the benchmark's
+per-family precision/recall report.
+"""
+from repro.telemetry import registry
+from repro.telemetry.builtin import (
+    CompositeDetector,
+    EWMAStragglerDetector,
+    MLDetector,
+    OracleDetector,
+)
+from repro.telemetry.detector import VERDICT_KINDS, Detector, Verdict
+from repro.telemetry.frame import (
+    RACK_DRIFT_STRESS,
+    TRANSIENT_ALARM_RATE,
+    HealthSignal,
+    TelemetryFrame,
+    frame_from_heartbeats,
+    synth_event_telemetry,
+)
+from repro.telemetry.registry import get, get_class, names, register, unregister
+
+__all__ = [
+    "CompositeDetector",
+    "Detector",
+    "EWMAStragglerDetector",
+    "HealthSignal",
+    "MLDetector",
+    "OracleDetector",
+    "RACK_DRIFT_STRESS",
+    "TRANSIENT_ALARM_RATE",
+    "TelemetryFrame",
+    "VERDICT_KINDS",
+    "Verdict",
+    "frame_from_heartbeats",
+    "get",
+    "get_class",
+    "names",
+    "register",
+    "registry",
+    "synth_event_telemetry",
+    "unregister",
+]

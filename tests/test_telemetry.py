@@ -1,0 +1,404 @@
+"""Unified telemetry & detection API: the Detector protocol, registry,
+adapters (oracle / ml / ewma_straggler), verdict-tape parity between the
+Python engine and the batched replay kernel, the degrade process kind's
+slowdown accounting, and the FailurePredictor satellites."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.failure import PREDICTABLE_FRACTION, PREDICTION_LEAD_S
+from repro.core.heartbeat import HeartbeatService
+from repro.core.runtime import ClusterRuntime
+from repro.core.sim import measure_micro
+from repro.core.straggler import StragglerDetector, mitigate
+from repro.scenarios import compile_batch, compile_tape, mc_trajectories, registry
+from repro.scenarios.engine import CampaignEngine
+from repro.scenarios.spec import FailureProcessSpec, ScenarioSpec, degrade_slowdown_s
+from repro.telemetry import (
+    CompositeDetector,
+    Detector,
+    EWMAStragglerDetector,
+    HealthSignal,
+    TelemetryFrame,
+    Verdict,
+)
+from repro.telemetry import registry as detectors
+
+
+_MICRO = {}
+
+
+def micro_for(n_nodes: int):
+    if n_nodes not in _MICRO:
+        _MICRO[n_nodes] = measure_micro("placentia", n_nodes=n_nodes)
+    return _MICRO[n_nodes]
+
+
+@pytest.fixture(scope="module")
+def micro():
+    return micro_for(4)
+
+
+# ------------------------------------------------------------- registry ---
+def test_registry_has_builtin_detectors_in_order():
+    names = detectors.names()
+    assert names[:3] == ["oracle", "ml", "ewma_straggler"]
+    assert detectors.get_class("predictor") is detectors.get_class("ml")  # alias
+    with pytest.raises(KeyError):
+        detectors.get("nope")
+
+
+def test_duplicate_detector_registration_rejected():
+    with pytest.raises(KeyError):
+
+        @detectors.register("oracle")
+        class Clash(Detector):  # pragma: no cover - never registered
+            def observe(self, t, frame):
+                return []
+
+    with pytest.raises(TypeError):
+        detectors.register("not_a_detector")(object)
+
+
+def test_custom_detector_runs_in_campaigns(micro):
+    """The PR-2 idiom: register once, drive everything — and a detector
+    that cries wolf on EVERY failure cannot beat the oracle: it saves
+    exactly the events that really emitted a signature, and every false
+    claim pays the wasted prediction work on top."""
+
+    @detectors.register("clairvoyant")
+    class Clairvoyant(Detector):
+        def observe(self, t, frame):
+            return [
+                Verdict(node=n, kind="failure_predicted", detector=self.name)
+                for n in frame.signals
+            ]
+
+        def verdict_tape(self, spec, times, predictable, rack_corr, seed):
+            n = len(times)
+            return np.ones(n, bool), np.full(n, PREDICTION_LEAD_S)
+
+    try:
+        spec = registry.get("mc_stress")
+        m = micro_for(spec.n_nodes)
+        res = CampaignEngine(spec, "core", micro=m, detector="clairvoyant").run()
+        base = CampaignEngine(spec, "core", micro=m).run()
+        assert res.survived
+        assert res.detector == "clairvoyant"
+        assert all(e["predicted"] for e in res.events)  # non-oracle records claim
+        # no-signature failures stay blind: lost progress matches the oracle
+        assert res.lost_s == base.lost_s
+        # ... and the false claims are billed (predict_s per claimed blind event)
+        n_false = sum(1 for e in res.events if e["predicted"] and not e["predictable"])
+        assert n_false > 0
+        assert res.reinstate_s == pytest.approx(
+            base.reinstate_s + n_false * m.predict_s
+        )
+        assert res.total_s > base.total_s
+    finally:
+        detectors.unregister("clairvoyant")
+
+
+# ------------------------------------------------- oracle regression ------
+def test_oracle_tape_is_the_predictable_bits():
+    spec = registry.get("mc_stress")
+    tape = compile_tape(spec, 0)
+    pred, lead = detectors.get("oracle").verdict_tape(
+        spec,
+        times=tape.times,
+        predictable=tape.predictable,
+        rack_corr=tape.rack_corr,
+        seed=0,
+    )
+    np.testing.assert_array_equal(pred, tape.predictable)
+    np.testing.assert_array_equal(lead > 0, tape.predictable)
+
+
+def test_oracle_campaign_records_keep_pre_detector_shape(micro):
+    """The regression anchor: under the default detector, records carry
+    neither a 'predicted' nor a 'detector' key — byte-identical to the
+    pre-refactor campaign output."""
+    res = CampaignEngine(registry.get("rack_outage"), "core", micro=micro).run()
+    assert "slowdown_s" not in res.to_dict()
+    assert "detector" not in res.to_dict()
+    assert all("predicted" not in e for e in res.events)
+
+
+# ----------------------------------------- engine/kernel verdict parity ---
+@pytest.mark.parametrize("det", ["ml", "ewma_straggler"])
+def test_kernel_matches_engine_under_inference_detectors(det):
+    """Trial-for-trial: the replay kernel consumes the same pre-sampled
+    verdict tape the engine does, for every detector."""
+    spec = registry.get("rack_outage")
+    m = micro_for(spec.n_nodes)
+    mc = mc_trajectories(spec, "core", n_seeds=6, micro=m, detector=det)
+    for s in range(6):
+        r = CampaignEngine(spec, "core", micro=m, seed=s, detector=det).run()
+        got = float(mc["trials"]["total_s"][s])
+        want = r.total_s if r.survived else float("nan")
+        assert (got != got and want != want) or got == pytest.approx(want, rel=1e-9), (
+            det,
+            s,
+        )
+        assert int(mc["trials"]["n_handled"][s]) == r.n_handled
+
+
+def test_verdict_tape_identical_across_batch_padding():
+    """Slot-keyed rng: a padded batch row and the engine's unpadded tape
+    draw identical verdicts on every real slot."""
+    spec = registry.get("multi_window_storm")
+    det = detectors.get("ml")
+    batch = compile_batch(spec, 4)
+    for s in range(4):
+        tape = compile_tape(spec, s)
+        v_tape, _ = det.verdict_tape(
+            spec,
+            times=tape.times,
+            predictable=tape.predictable,
+            rack_corr=tape.rack_corr,
+            seed=s,
+        )
+        v_row, _ = det.verdict_tape(
+            spec,
+            times=batch.times[s],
+            predictable=batch.predictable[s],
+            rack_corr=batch.rack_corr[s],
+            seed=int(batch.seeds[s]),
+        )
+        np.testing.assert_array_equal(v_row[: tape.n_slots], v_tape)
+        assert not v_row[tape.n_slots :].any()  # padding never fires
+
+
+def test_default_verdict_tape_routes_through_observe():
+    """A detector that only implements the live path still runs compiled
+    campaigns: the default tape synthesises frames and calls observe."""
+
+    class ThresholdDetector(Detector):
+        name = "ecc_threshold"
+
+        def observe(self, t, frame):
+            out = []
+            for n, sig in frame.signals.items():
+                if sig.features[2] > 3.0:  # ECC errors: healthy ~0.3, degrading ~6
+                    out.append(Verdict(node=n, kind="failure_predicted", detector=self.name))
+            return out
+
+    spec = registry.get("mc_stress")
+    tape = compile_tape(spec, 0)
+    pred, _ = ThresholdDetector().verdict_tape(
+        spec,
+        times=tape.times,
+        predictable=tape.predictable,
+        rack_corr=tape.rack_corr,
+        seed=0,
+    )
+    # a crude log-miner still catches most signature-emitting failures
+    hits = pred[tape.predictable]
+    assert hits.mean() > 0.6
+    assert pred.sum() < tape.n_slots  # ... without claiming everything
+
+
+# -------------------------------------------------------- ml detector -----
+def test_ml_detector_coverage_bounded_and_in_precision_band():
+    """Inference on a rack-correlated family: coverage cannot exceed the
+    29 % of failures that emit a signature; precision sits in the paper's
+    ~64 % operating band."""
+    spec = registry.get("mc_stress")
+    det = detectors.get("ml")
+    batch = compile_batch(spec, 40)
+    tp = fp = fn = tn = 0
+    for s in range(batch.n_seeds):
+        v, _ = det.verdict_tape(
+            spec,
+            times=batch.times[s],
+            predictable=batch.predictable[s],
+            rack_corr=batch.rack_corr[s],
+            seed=int(batch.seeds[s]),
+        )
+        m = batch.valid[s]
+        gt, pd = batch.predictable[s][m], v[m]
+        tp += int((gt & pd).sum())
+        fp += int((~gt & pd).sum())
+        fn += int((gt & ~pd).sum())
+        tn += int((~gt & ~pd).sum())
+    total = tp + fp + fn + tn
+    assert total > 1500
+    assert tp / total <= PREDICTABLE_FRACTION + 0.04
+    assert 0.50 <= tp / (tp + fp) <= 0.80
+
+
+@pytest.mark.slow
+def test_ml_detector_end_to_end_campaign_precision_recall():
+    """End-to-end through the ENGINE on a rack-correlated campaign: the
+    per-event records' detector claims vs ground truth land at the
+    paper's operating point (satellite: MLDetector e2e assertion)."""
+    spec = registry.get("mc_stress")
+    m = micro_for(spec.n_nodes)
+    tp = fp = fn = 0
+    for s in range(30):
+        res = CampaignEngine(spec, "core", micro=m, seed=s, detector="ml").run()
+        for e in res.events:
+            if "predicted" not in e:
+                continue
+            if e["predicted"] and e["predictable"]:
+                tp += 1
+            elif e["predicted"]:
+                fp += 1
+            elif e["predictable"]:
+                fn += 1
+    assert tp + fp + fn > 100
+    precision = tp / (tp + fp)
+    recall = tp / (tp + fn)
+    assert 0.50 <= precision <= 0.80
+    assert recall >= 0.90  # clean degrading signatures are nearly always read
+
+
+# ---------------------------------------------------- degrade / slowdown ---
+def test_degrade_process_emits_no_events_but_a_timeline():
+    spec = registry.get("straggler_drift")
+    assert spec.degrade_timeline() == [(1800.0, 7200.0, 2, 0.4, 600.0)]
+    assert all(e.cause != "degrade" for e in spec.events())
+    # dict round-trip keeps the process
+    spec2 = ScenarioSpec.from_dict(spec.to_dict())
+    assert spec2.degrade_timeline() == spec.degrade_timeline()
+
+
+def test_degrade_rejects_bad_factor():
+    spec = ScenarioSpec(
+        name="bad",
+        n_nodes=4,
+        horizon_s=3600.0,
+        processes=[FailureProcessSpec("degrade", {"node": 1, "factor": 0.0})],
+    )
+    with pytest.raises(ValueError):
+        spec.degrade_timeline()
+
+
+def test_slowdown_accounting_and_straggler_mitigation(micro_none=None):
+    """A degrading-but-alive node slows every synchronous step; a
+    straggler-flagging detector rebalances work off it and pays less."""
+    spec = registry.get("straggler_drift")
+    blind = degrade_slowdown_s(spec, mitigate_stragglers=False)
+    seen = degrade_slowdown_s(spec, mitigate_stragglers=True)
+    assert blind > 0.0
+    # 90 min at <= 1/0.4 pacing bounds the blind bill
+    assert blind <= 5400.0 * (1 / 0.4 - 1)
+    assert 0.0 < seen < blind
+
+    m = micro_for(spec.n_nodes)
+    r_blind = CampaignEngine(spec, "core", micro=m).run()
+    r_seen = CampaignEngine(spec, "core", micro=m, detector="ewma_straggler").run()
+    assert r_blind.slowdown_s == pytest.approx(blind)
+    assert r_seen.slowdown_s == pytest.approx(seen)
+    assert r_blind.to_dict()["slowdown_s"] == round(blind, 3)
+    # totals include the slowdown window
+    assert r_blind.total_s == pytest.approx(
+        spec.horizon_s
+        + r_blind.lost_s
+        + r_blind.reinstate_s
+        + r_blind.overhead_s
+        + r_blind.probe_s
+        + blind
+    )
+
+
+def test_ewma_straggler_flags_live_drift():
+    det = EWMAStragglerDetector(n_hosts=8)
+    rng = np.random.default_rng(0)
+    flagged = []
+    for _ in range(20):
+        lat = rng.normal(1.0, 0.02, size=8)
+        lat[5] /= 0.4  # host 5 is slow
+        frame = TelemetryFrame(t=0.0, step_latency=lat)
+        flagged = det.observe(0.0, frame)
+    assert [v.node for v in flagged] == [5]
+    assert all(v.kind == "straggler" for v in flagged)
+
+
+def test_composite_detector_concatenates_and_flags():
+    comp = CompositeDetector([detectors.get("oracle"), EWMAStragglerDetector(n_hosts=4)])
+    assert comp.flags_stragglers
+    frame = TelemetryFrame(
+        t=0.0,
+        step_latency=np.ones(4),
+        oracle={"node": 2, "imminent": True, "lead_s": 38.0},
+    )
+    vs = comp.observe(0.0, frame)
+    assert [(v.node, v.kind) for v in vs] == [(2, "failure_predicted")]
+
+
+# ------------------------------------------------- straggler satellites ---
+def test_straggler_detector_survives_dataclasses_replace():
+    det = StragglerDetector(n_hosts=4)
+    det.observe(np.ones(4))
+    det.observe(np.array([1.0, 1.0, 1.0, 5.0]))
+    twin = dataclasses.replace(det)
+    np.testing.assert_array_equal(twin.mean, det.mean)
+    np.testing.assert_array_equal(twin.var, det.var)
+    assert twin.count == det.count
+
+
+def test_mitigate_small_shards_still_shed_work():
+    # int(1 * 0.5) == 0 used to leave the straggler pacing the whole step
+    out = mitigate([1, 1, 1, 1], [2])
+    assert out[2] == 0
+    assert sum(out) == 4
+    # zero-work stragglers and factor 0 stay no-ops
+    assert mitigate([0, 4, 4, 4], [0]) == [0, 4, 4, 4]
+    assert mitigate([4, 4, 4, 4], [1], factor=0.0) == [4, 4, 4, 4]
+
+
+# ------------------------------------------------ heartbeat growth --------
+def test_heartbeat_service_grows_with_the_cluster():
+    rt = ClusterRuntime(n_hosts=4, n_spares=1)
+    n0 = rt.heartbeats.n  # 5: workers + spares
+    assert rt.provision_spare(n0 + 1)  # a brand-new host id, beyond n0
+    assert rt.heartbeats.n == n0 + 2
+    assert len(rt.heartbeats.latency_ewma) == n0 + 2
+    assert (n0 + 1) in rt.heartbeats.logs and rt.heartbeats.alive(n0 + 1)
+    assert (n0 + 1) in rt.spares
+    feats = rt.heartbeats.tick()  # the new node heartbeats with the ring
+    assert (n0 + 1) in feats
+    # and can host work through the normal placement path
+    assert rt.hosts[n0 + 1].is_spare
+
+
+def test_heartbeat_add_node_joins_rack():
+    hb = HeartbeatService(2, racks={0: 0, 1: 0})
+    i = hb.add_node(rack=0)
+    assert i == 2 and hb.racks[i] == 0
+    assert set(hb.rack_peers(i)) == {0, 1}
+
+
+# ------------------------------------------- predictor satellites ---------
+def test_predictor_threshold_selection_deterministic_across_seeds():
+    from repro.core.predictor import FailurePredictor
+
+    for seed in (0, 7):
+        a = FailurePredictor.train(seed=seed, epochs=60)
+        b = FailurePredictor.train(seed=seed, epochs=60)
+        assert a.threshold == b.threshold
+        np.testing.assert_array_equal(np.asarray(a.params["w"]), np.asarray(b.params["w"]))
+        np.testing.assert_array_equal(a.mu, b.mu)
+
+
+def test_predictor_evaluate_coverage_bounded_by_predictable_fraction():
+    from repro.core.predictor import FailurePredictor
+
+    p = FailurePredictor.train(seed=3)
+    for eval_seed in (11, 99):
+        stats = p.evaluate(seed=eval_seed, n=2000)
+        assert stats["coverage"] <= PREDICTABLE_FRACTION + 0.03
+        assert stats["tp"] + stats["fn"] + stats["fp"] + stats["tn"] == 2000
+
+
+def test_score_many_matches_scalar_score():
+    from repro.core.predictor import FailurePredictor
+
+    p = FailurePredictor.train(seed=0, epochs=60)
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(5, 6)).astype(np.float32)
+    many = p.score_many(xs)
+    for i in range(5):
+        assert many[i] == pytest.approx(p.score(xs[i]), abs=1e-6)
