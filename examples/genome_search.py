@@ -1,26 +1,37 @@
 """The paper's validation job: parallel genome pattern searching with
 multi-agent fault tolerance (paper §Genome searching).
 
-Three search sub-jobs + one combiner (Z=4, the paper's setup). A failure is
-predicted on a search node mid-job; the decision rules pick the mechanism
-(Rule 1: Z<=10 -> core intelligence, as the paper's Table 1 run selects);
-the sub-job migrates and the combined hit table is verified identical to a
-failure-free run, plus all planted patterns recovered.
+Three search sub-jobs + one combiner (Z=4, the paper's setup), driven
+entirely through the registries — no hand-wired units:
+
+  1. the FT run resolves a registered FaultToleranceStrategy, attaches it
+     to the cluster runtime with the REAL sub-job states as payloads, and
+     routes a predicted failure through the strategy protocol
+     (``on_prediction``). The decision rules pick the mechanism (Rule 1:
+     Z<=10 -> core intelligence, as the paper's Table 1 run selects) and
+     the combined hit table is verified identical to a failure-free run,
+     plus all planted patterns recovered;
+  2. the campaign run prices the paper-scale job through the scenario
+     engine under the ``genome_search`` workload model (jit-calibrated
+     cost surfaces from ``repro.workloads``), reproducing the paper's
+     headline ordering: checkpointing >> multi-agent overhead.
 
     PYTHONPATH=src python examples/genome_search.py [--genome-mb 1]
+        [--workload genome_search] [--strategy hybrid]
 """
 import argparse
 import time
 
-import numpy as np
-
-from repro.core.hybrid import HybridUnit
-from repro.core.agent import Agent
+from repro.core.failure import FailureEvent
 from repro.core.migration import DependencyGraph
 from repro.core.rules import decide
 from repro.core.runtime import ClusterRuntime
-from repro.core.virtual_core import VirtualCore
+from repro.core.sim import fmt_hms
 from repro.data.genome import GenomeSearchJob, make_genome
+from repro.scenarios import registry as scenarios
+from repro.scenarios.engine import CampaignEngine
+from repro.strategies import registry as strategies
+from repro.workloads import registry as workloads
 
 
 def main():
@@ -29,6 +40,11 @@ def main():
                     help="synthetic genome size (paper: 512 MB replicated)")
     ap.add_argument("--patterns", type=int, default=24,
                     help="pattern dictionary size (paper: 5000)")
+    ap.add_argument("--workload", default="genome_search",
+                    choices=workloads.names(),
+                    help="workload model billing the campaign section")
+    ap.add_argument("--strategy", default="hybrid",
+                    help="registered FT strategy driving the live migration")
     args = ap.parse_args()
 
     G = int(args.genome_mb * 1e6)
@@ -46,26 +62,33 @@ def main():
     want = job.combine(states)
     print(f"reference run: {len(want)} hits in {time.perf_counter()-t0:.2f}s")
 
-    # FT run: predicted failure on node 0 after its first chunk
+    # FT run through the unified strategy protocol: the registered
+    # strategy owns the units, the placement policy and the accounting
+    wl = workloads.get(args.workload)
+    micro = wl.micro("placentia", n_nodes=4)
     rt = ClusterRuntime(n_hosts=4, n_spares=1, profile="placentia",
                         graph=DependencyGraph.star(3))
     states = job.sub_job_states()
-    for i, st in enumerate(states):
-        rt.occupy(i, st, f"hybrid:{i}")
+    strat = strategies.get(args.strategy)
+    strat.attach(rt, dict(enumerate(states)), micro=micro)
     job.run_sub_job_step(states[0])
 
     z = rt.graph.degree(0) + 1
     dec = decide(z, genome.nbytes, genome.nbytes)
     print(f"decision rules: Z={z}, S_d={genome.nbytes}B -> {dec.mechanism} ({dec.rule})")
 
-    unit = HybridUnit(Agent(0, 0, states[0]), VirtualCore(0, 0))
-    rep = unit.handle_prediction(rt)
-    print(f"migrated node0 {rep['from']}->{rep['to']} via {rep['mechanism']}: "
-          f"reinstate={rep['reinstate_s']*1000:.1f} ms "
-          f"(paper: {'0.38' if rep['mechanism']=='core' else '0.47'} s on Placentia), "
-          f"hash_ok={rep['hash_ok']}")
+    # predicted failure on node 0 after its first chunk: the strategy
+    # migrates the live sub-job state inside the lead window
+    ev = FailureEvent(t=900.0, node=0, predictable=True)
+    out = strat.on_prediction(ev, strat.pick_target(0, require_free=True))
+    rep = out.report
+    mech = out.mechanism or rep.get("kind", "checkpoint")
+    print(f"migrated node0 {rep.get('from', 0)}->{out.new_host} via {mech}: "
+          f"reinstate={rep.get('reinstate_s', out.reinstate_s)*1000:.1f} ms "
+          f"(paper: {'0.38' if mech=='core' else '0.47'} s on Placentia), "
+          f"hash_ok={rep.get('hash_ok', True)}")
 
-    states[0] = rt.hosts[unit.host].shard
+    states[0] = rt.hosts[out.new_host].shard
     for st in states:
         while job.run_sub_job_step(st):
             pass
@@ -79,6 +102,22 @@ def main():
     print("seqname  start    end      patternID  strand")
     for h in got[:6]:
         print(f"{h[0]:8s} {h[1]:<8d} {h[2]:<8d} pattern{h[3]:<8d} {h[4]}")
+
+    # campaign pricing: the paper-scale job as a registered scenario,
+    # billed under the chosen workload's calibrated cost surfaces
+    spec = scenarios.get("genome_campaign")
+    print(f"\ncampaign '{spec.name}' ({spec.description}) under "
+          f"workload '{wl.name}':")
+    overheads = {}
+    for approach in ("central_single", "agent", "core", "hybrid"):
+        res = CampaignEngine(spec, approach, workload=wl).run()
+        ovh = 100.0 * (res.total_s - spec.horizon_s) / spec.horizon_s
+        overheads[approach] = ovh
+        print(f"  {approach:15s} total={fmt_hms(res.total_s)} "
+              f"overhead={ovh:5.1f}%  migrations={res.n_migrations}")
+    worst_agent = max(v for k, v in overheads.items() if k != "central_single")
+    assert overheads["central_single"] > worst_agent, overheads
+    print("paper ordering holds: checkpointing >> multi-agent overhead")
     print("OK")
 
 

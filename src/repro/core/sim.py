@@ -30,6 +30,7 @@ difference in EXPERIMENTS.md.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -102,9 +103,32 @@ def measure_micro(
     payload_elems: int = 1 << 16,
 ) -> MicroCosts:
     """Execute the real migration machinery once per mechanism to obtain the
-    measured tier; fill in modelled control/staging parts from the profile."""
+    measured tier; fill in modelled control/staging parts from the profile.
+
+    Memoized on the full argument tuple: the measurement drives real
+    state moves and dependency surgery, and ~10 engine/bench/test call
+    sites price campaigns from it. One execution per distinct
+    configuration keeps repeated callers on the *identical* ``MicroCosts``
+    object — byte-identical totals and one shared jitted replay program —
+    instead of a numerically distinct wall-clock remeasurement per call.
+    Treat the returned record as read-only."""
+    # normalise the "payload defaults to the data size" shorthand BEFORE
+    # the cache key so explicit and defaulted spellings share one entry
+    return _measure_micro_cached(
+        profile_name, n_nodes, z, s_d_bytes, s_p_bytes or s_d_bytes, payload_elems
+    )
+
+
+@lru_cache(maxsize=None)
+def _measure_micro_cached(
+    profile_name: str,
+    n_nodes: int,
+    z: int,
+    s_d_bytes: int,
+    s_p_bytes: int,
+    payload_elems: int,
+) -> MicroCosts:
     profile = get_profile(profile_name)
-    s_p_bytes = s_p_bytes or s_d_bytes
 
     def mk_rt():
         rt = ClusterRuntime(
@@ -164,6 +188,11 @@ def measure_micro(
         measured_agent_s=float(arep["reinstate_measured_s"]),
         measured_core_s=float(crep["reinstate_measured_s"]),
     )
+
+
+# tests that want a fresh wall-clock measurement can drop the memo table
+measure_micro.cache_clear = _measure_micro_cached.cache_clear  # type: ignore[attr-defined]
+measure_micro.cache_info = _measure_micro_cached.cache_info  # type: ignore[attr-defined]
 
 
 def _totals(
@@ -272,16 +301,25 @@ def scenario_totals(
     strategies=None,
     micro: Optional[MicroCosts] = None,
     profile_name: str = "placentia",
+    workload=None,
 ) -> Dict[str, Dict]:
     """Total execution time of a scenario under each FT strategy.
 
     `scenario` is a ScenarioSpec or a registered scenario name;
     `strategies` defaults to every name in the strategy registry. Returns
     {strategy: {"total_s", "source", "survived", ...}} where source is
-    "closed_form" for the paper-reducible specs and "engine" otherwise."""
+    "closed_form" for the paper-reducible specs and "engine" otherwise.
+
+    ``workload`` (a registered name or :class:`~repro.workloads.base.
+    Workload` instance; default: the spec's declared workload, then
+    ``"analytic"``) supplies the micro-costs when none are given — the
+    ``analytic`` workload reduces to the seed ``measure_micro`` call
+    bit-for-bit, calibrated workloads price the same campaign from their
+    own cost surfaces."""
     from repro.scenarios import registry  # lazy: avoid import cycle
     from repro.scenarios.engine import CampaignEngine
     from repro.scenarios.spec import ScenarioSpec
+    from repro.workloads import resolve as resolve_workload
 
     spec: ScenarioSpec = registry.get(scenario) if isinstance(scenario, str) else scenario
     strategies = (
@@ -289,7 +327,8 @@ def scenario_totals(
         if strategies is None
         else tuple(get_strategy_class(s).name for s in strategies)  # aliases ok
     )
-    micro = micro or measure_micro(profile_name, n_nodes=spec.n_nodes)
+    workload = resolve_workload(workload, spec)
+    micro = micro or workload.micro(profile_name, n_nodes=spec.n_nodes)
     out: Dict[str, Dict] = {}
 
     proc = next(
@@ -340,7 +379,9 @@ def scenario_totals(
         return out
 
     for strat in strategies:
-        res = CampaignEngine(spec, approach=strat, profile=profile_name, micro=micro).run()
+        res = CampaignEngine(
+            spec, approach=strat, profile=profile_name, micro=micro, workload=workload
+        ).run()
         out[strat] = {
             "total_s": res.total_s,
             "source": "engine",

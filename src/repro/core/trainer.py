@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
@@ -79,6 +79,8 @@ class FTTrainer:
         seed: int = 0,
         placement: str = "nearest-spare",
         detector: str = "oracle",  # any registered telemetry detector
+        workload: Optional[str] = None,  # a repro.workloads name: paces the
+        #   failure time axis from the workload's calibrated step-time surface
     ):
         self.train_step = jax.jit(train_step)
         self.init_state = init_state
@@ -133,6 +135,17 @@ class FTTrainer:
             from repro.core.speculative import SpeculativeEgress
 
             self.egress = SpeculativeEgress(self.rt, placement=self.placement)
+        # optional workload model: one trainer "step" is one synchronous
+        # unit of the workload, so the failure schedule's time axis runs at
+        # the workload's calibrated step time instead of the 1 s default
+        self.workload = None
+        self._workload_step_s = None
+        if workload is not None:
+            from repro.workloads import resolve as resolve_workload
+
+            self.workload = resolve_workload(workload)
+            table = self.workload.cost_table(profile, n_nodes=n_hosts)
+            self._workload_step_s = float(table.step_time(n_hosts))
 
     # -- internal ------------------------------------------------------------
     @property
@@ -147,8 +160,14 @@ class FTTrainer:
         self.strategy.sync(self.home, self.state)
         return rep
 
-    def run(self, n_steps: int, failures: List[FailureEvent], step_time_s: float = 1.0) -> FTReport:
-        """step_time_s maps steps onto the failure schedule's time axis."""
+    def run(
+        self, n_steps: int, failures: List[FailureEvent], step_time_s: Optional[float] = None
+    ) -> FTReport:
+        """step_time_s maps steps onto the failure schedule's time axis
+        (default: the workload's calibrated step time when the trainer was
+        built with ``workload=``, else 1 s per step)."""
+        if step_time_s is None:
+            step_time_s = self._workload_step_s if self._workload_step_s else 1.0
         rep = FTReport()
         fq = sorted(failures, key=lambda e: e.t)
         fi = 0

@@ -54,6 +54,13 @@ stay trial-for-trial interchangeable under any detector. The default
 as extra synchronous-step time (:func:`~repro.scenarios.spec.
 degrade_slowdown_s`); a straggler-flagging detector mitigates them by
 rebalancing work off the slow shard.
+
+The *workload* is the third pluggable axis: ``workload=`` (or the spec's
+declared ``ScenarioSpec.workload``) names a :mod:`repro.workloads` model
+whose calibrated micro-costs bill the campaign when no explicit
+``micro`` is given. The default ``"analytic"`` workload resolves the
+seed ``measure_micro`` record verbatim, keeping campaign records
+byte-identical to the pre-workload-API engine.
 """
 from __future__ import annotations
 
@@ -65,11 +72,12 @@ import numpy as np
 from repro.core.failure import FailureEvent
 from repro.core.migration import DependencyGraph
 from repro.core.runtime import ClusterRuntime
-from repro.core.sim import MicroCosts, measure_micro
+from repro.core.sim import MicroCosts
 from repro.scenarios.spec import ScenarioSpec, degrade_slowdown_s
 from repro.strategies import registry as strategy_registry
 from repro.telemetry import registry as detector_registry
 from repro.telemetry.detector import Detector
+from repro.workloads import Workload, resolve as resolve_workload
 
 
 def __getattr__(name):
@@ -98,6 +106,7 @@ class CampaignResult:
     probe_s: float
     slowdown_s: float = 0.0  # degrade windows: extra synchronous-step time
     detector: str = "oracle"
+    workload: str = "analytic"
     events: List[Dict] = field(default_factory=list)
 
     def to_dict(self) -> Dict:
@@ -117,12 +126,14 @@ class CampaignResult:
             "overhead_s": round(self.overhead_s, 3),
             "probe_s": round(self.probe_s, 3),
         }
-        # appended only when active, keeping the oracle campaign records
-        # byte-identical to their pre-detector-API form
+        # appended only when active, keeping the oracle/analytic campaign
+        # records byte-identical to their pre-detector/workload-API form
         if self.slowdown_s:
             d["slowdown_s"] = round(self.slowdown_s, 3)
         if self.detector != "oracle":
             d["detector"] = self.detector
+        if self.workload != "analytic":
+            d["workload"] = self.workload
         return d
 
 
@@ -139,6 +150,7 @@ class CampaignEngine:
         seed: Optional[int] = None,
         placement: Optional[str] = None,
         detector: "str | Detector" = "oracle",
+        workload: "str | Workload | None" = None,
     ):
         try:
             cls = strategy_registry.get_class(approach)
@@ -149,7 +161,11 @@ class CampaignEngine:
         self.spec = spec
         self.approach = cls.name  # canonical ("checkpoint" -> "central_single")
         self.profile = profile
-        self.micro = micro or measure_micro(profile, n_nodes=spec.n_nodes)
+        # explicit arg wins, then the spec's declared workload, then the
+        # analytic anchor — whose micro is the seed measure_micro record
+        # verbatim (memoized), keeping default campaigns byte-identical
+        self.workload = resolve_workload(workload, spec)
+        self.micro = micro or self.workload.micro(profile, n_nodes=spec.n_nodes)
         self.payload_elems = payload_elems
         self.seed = spec.seed if seed is None else seed
         # explicit arg wins, then the spec's declared policy, then the
@@ -224,6 +240,7 @@ class CampaignEngine:
             overhead_s=0.0,
             probe_s=0.0,
             detector=self.detector.name,
+            workload=self.workload.name,
         )
 
         for j in range(tape.n_slots):

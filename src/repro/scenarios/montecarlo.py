@@ -238,6 +238,7 @@ def mc_trajectories(
     placement: Optional[str] = None,
     batch=None,
     detector="oracle",
+    workload=None,
 ) -> Dict:
     """Monte-Carlo over full engine trajectories for ANY scenario family.
 
@@ -251,11 +252,16 @@ def mc_trajectories(
     every trial is lost, e.g. ``spare_exhaustion``), the survival rate,
     mean counters, and the raw per-seed arrays under ``"trials"``. Pass a
     pre-compiled ``batch`` (:func:`compile_batch`) to amortise tape
-    compilation across strategies."""
+    compilation across strategies; the same batch replays under any
+    workload (``workload`` picks the registered cost model the trials
+    are billed with when ``micro`` is not given — tapes are
+    workload-independent, only the billing changes)."""
     from repro.scenarios import registry
     from repro.scenarios.trajectory import compile_batch, replay_batch
+    from repro.workloads import resolve as resolve_workload
 
     spec = registry.get(spec) if isinstance(spec, str) else spec
+    workload = resolve_workload(workload, spec)
     if batch is None:
         batch = compile_batch(spec, n_seeds, base_seed=seed)
     out = replay_batch(
@@ -266,6 +272,7 @@ def mc_trajectories(
         profile=profile,
         placement=placement,
         detector=detector,
+        workload=workload,
     )
     totals = out["total_s"]
     ok = out["survived"]
@@ -274,6 +281,9 @@ def mc_trajectories(
     return {
         "scenario": spec.name,
         "strategy": strategy,
+        # the cost model the trials were billed under (advisory when an
+        # explicit micro overrode it)
+        "workload": workload.name,
         "n_seeds": int(batch.n_seeds),
         "survival_rate": float(np.mean(ok)),
         "mean_s": stat(np.mean),

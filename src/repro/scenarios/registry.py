@@ -272,6 +272,73 @@ def _multi_window_storm() -> ScenarioSpec:
     )
 
 
+# ------------------------------------------------ workload-bound families ---
+def _genome_campaign() -> ScenarioSpec:
+    """The paper's five-hour genome job at campaign scale, billed under its
+    jit-calibrated workload model (``workloads/builtin.GenomeSearchWorkload``)
+    instead of the analytic scalar record: per-window random failures plus
+    one mid-job rack outage, repairs returning nodes to the pool."""
+    return ScenarioSpec(
+        name="genome_campaign",
+        n_nodes=4,
+        n_spares=3,
+        horizon_s=5 * 3600.0,
+        period_s=3600.0,
+        racks={0: 0, 1: 0, 2: 1, 3: 1},
+        processes=[
+            FailureProcessSpec("random", {}),
+            FailureProcessSpec("rack", {"rack": 1, "t": 2.5 * 3600.0, "spread_s": 90.0}),
+        ],
+        repair_s=1800.0,
+        workload="genome_search",
+        description="paper genome job, calibrated workload, random + rack failures",
+    )
+
+
+def _llm_pretrain_storm() -> ScenarioSpec:
+    """State-heavy extreme: a data-parallel LLM pre-training fleet whose
+    recovery payload is the full optimizer state (``train_llm`` workload —
+    checkpoint writes dominate everything), with a flaky host and
+    per-window random failures across a six-hour run."""
+    return ScenarioSpec(
+        name="llm_pretrain_storm",
+        n_nodes=8,
+        n_spares=3,
+        horizon_s=6 * 3600.0,
+        period_s=3600.0,
+        racks={i: i // 4 for i in range(8)},
+        processes=[
+            FailureProcessSpec("random", {}),
+            FailureProcessSpec("flaky", {"node": 5, "every_s": 5400.0}),
+        ],
+        repair_s=1800.0,
+        max_strikes=3,
+        workload="train_llm",
+        description="LLM pre-training fleet: random + flaky under optimizer-state recovery",
+    )
+
+
+def _decode_fleet_churn() -> ScenarioSpec:
+    """Small-state extreme: a KV-cache decode-serving fleet (``serve_decode``
+    workload — tiny checkpoints, rebalance-sensitive) under a flaky replica
+    and a mid-window burst; fast repairs keep the fleet churning."""
+    return ScenarioSpec(
+        name="decode_fleet_churn",
+        n_nodes=8,
+        n_spares=3,
+        horizon_s=2 * 3600.0,
+        period_s=3600.0,
+        processes=[
+            FailureProcessSpec("flaky", {"node": 1, "every_s": 1500.0}),
+            FailureProcessSpec("burst", {"t": 4500.0, "k": 2}),
+        ],
+        repair_s=900.0,
+        max_strikes=4,
+        workload="serve_decode",
+        description="decode-serving fleet: flaky replica + burst under KV-cache recovery",
+    )
+
+
 for _f in (
     _table1_periodic,
     _table1_random,
@@ -285,5 +352,8 @@ for _f in (
     _straggler_drift,
     _mc_stress,
     _multi_window_storm,
+    _genome_campaign,
+    _llm_pretrain_storm,
+    _decode_fleet_churn,
 ):
     register(_f().name, _f)

@@ -106,6 +106,11 @@ class ScenarioSpec:
     # default, nearest-spare). Partition scenarios set "partition-aware"
     # so migrations respect the cut.
     placement: Optional[str] = None
+    # workload model the campaign is billed under (a repro.workloads
+    # registry name). "analytic" is the seed scalar cost model; calibrated
+    # workloads (genome_search, train_llm, serve_decode, ...) price the
+    # same failure stream from their own cost surfaces.
+    workload: str = "analytic"
     seed: int = 0
     description: str = ""
     # set for the paper's two patterns so sim.py can take the exact

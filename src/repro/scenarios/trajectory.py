@@ -579,16 +579,14 @@ def _payload_bytes(payload_elems: int) -> int:
     return tree_bytes({"partial": np.zeros(payload_elems, np.float32), "cursor": 0})
 
 
-@lru_cache(maxsize=32)
-def _default_micro(profile: str, n_nodes: int):
-    """Default MicroCosts per (profile, n_nodes). measure_micro is
-    wall-clock measured, so a fresh measurement per call would yield a
-    numerically distinct cost table — and a full jit recompile — every
-    time; caching keeps repeated replay_batch/mc_trajectories calls on
-    the same compiled program."""
-    from repro.core.sim import measure_micro
-
-    return measure_micro(profile, n_nodes=n_nodes)
+def _default_micro(workload, profile: str, n_nodes: int):
+    """Default MicroCosts per (workload, profile, n_nodes). The
+    underlying ``measure_micro`` is memoized on its full argument tuple,
+    so repeated replay_batch/mc_trajectories calls under the same
+    workload share one record — and therefore one compiled program —
+    instead of a numerically distinct wall-clock remeasurement (and a
+    full jit recompile) per call."""
+    return workload.micro(profile, n_nodes=n_nodes)
 
 
 def replay_batch(
@@ -601,12 +599,18 @@ def replay_batch(
     placement: Optional[str] = None,
     payload_elems: int = 1 << 10,
     detector="oracle",
+    workload=None,
 ) -> Dict[str, np.ndarray]:
     """Replay a compiled :class:`TapeBatch` under one strategy's cost table.
 
     ``strategy`` is a registered name (aliases ok) or a strategy
     instance; ``detector`` likewise (a :class:`~repro.telemetry.detector.
-    Detector` name or instance). Per-event verdict tapes are pre-sampled
+    Detector` name or instance); ``workload`` a :mod:`repro.workloads`
+    name or instance supplying the micro-costs when none are given
+    (default: the spec's declared workload, then ``analytic`` — the seed
+    cost model bit-for-bit). Because the engine resolves the identical
+    record, trial-for-trial parity holds under every workload.
+    Per-event verdict tapes are pre-sampled
     per seed in schedule order — the exact draws the Python engine makes —
     and fed to the kernel alongside the ground-truth ``predictable`` bits
     (a failure is *saved* only when claimed AND a real lead window
@@ -625,6 +629,7 @@ def replay_batch(
     from repro.telemetry import registry as detector_registry
     from repro.telemetry.detector import Detector
     from repro.scenarios.spec import degrade_slowdown_s
+    from repro.workloads import resolve as resolve_workload
 
     if isinstance(strategy, FaultToleranceStrategy):
         strat = strategy
@@ -632,7 +637,7 @@ def replay_batch(
         strat = strategy_registry.get(strategy)
     det = detector if isinstance(detector, Detector) else detector_registry.get(detector)
     if micro is None:
-        micro = _default_micro(profile, spec.n_nodes)
+        micro = _default_micro(resolve_workload(workload, spec), profile, spec.n_nodes)
     table = strat.cost_table(CostContext(micro=micro, period_h=spec.period_s / 3600.0))
 
     # per-seed verdict tapes (the oracle's is the predictable bits verbatim)

@@ -1,0 +1,41 @@
+"""Pluggable workload models: calibrated cost surfaces for the FT stack.
+
+    from repro.workloads import registry
+    wl = registry.get("genome_search")
+    table = wl.cost_table("placentia", n_nodes=4)   # vectorised surfaces
+    micro = wl.micro("placentia", n_nodes=4)        # campaign billing record
+
+The workload is the third pluggable axis of a campaign, alongside the
+strategy (``repro.strategies``) and the detector (``repro.telemetry``):
+
+    CampaignEngine(spec, "core", workload="train_llm").run()
+    mc_trajectories(spec, "hybrid", workload="serve_decode")
+"""
+from repro.workloads import registry
+from repro.workloads.base import DEFAULT_SHARD_GRID, Workload, WorkloadCostTable
+from repro.workloads.registry import get, get_class, names, register, unregister
+
+
+def resolve(workload, spec=None) -> Workload:
+    """One resolution rule for every ``workload=`` parameter: an explicit
+    instance or name wins, then the spec's declared workload, then the
+    ``analytic`` anchor (the seed cost model, bit-for-bit)."""
+    if isinstance(workload, Workload):
+        return workload
+    if workload is None:
+        workload = getattr(spec, "workload", None) or "analytic"
+    return registry.get(workload)
+
+
+__all__ = [
+    "DEFAULT_SHARD_GRID",
+    "Workload",
+    "WorkloadCostTable",
+    "get",
+    "get_class",
+    "names",
+    "register",
+    "registry",
+    "resolve",
+    "unregister",
+]

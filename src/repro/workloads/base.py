@@ -1,0 +1,192 @@
+"""The pluggable workload-model API: calibrated cost surfaces connecting
+the FT simulator to the repo's real compute layers.
+
+The paper validates its multi-agent fault tolerance on ONE workload —
+parallel genome pattern searching — and the simulator inherited that
+choice as a single scalar :class:`~repro.core.sim.MicroCosts` record
+baked into every campaign. Recovery cost, however, is dominated by the
+workload's state size and recomputation profile (Treaster, cs/0501002),
+and per-task recovery semantics — not one global cost — are what the
+hybrid-workflow FT literature argues for (Mulone et al., 2407.05337).
+This module makes the workload a third pluggable axis, alongside the
+strategies (``repro.strategies``) and detectors (``repro.telemetry``):
+
+* a :class:`Workload` describes one application's cost structure — how
+  long a synchronous step takes at a given shard count, how many bytes a
+  shard's migratable state is, what a checkpoint write/restore of that
+  state costs, what moving or rebalancing a victim shard costs;
+* :meth:`Workload.cost_table` tabulates those surfaces as a
+  :class:`WorkloadCostTable` (hashable, jnp-consumable via
+  :meth:`WorkloadCostTable.surfaces` / :meth:`WorkloadCostTable.at`);
+* :meth:`Workload.micro` binds the workload into the existing billing
+  contract: it prices the measured/modelled micro-cost record from the
+  workload's calibrated sizes, so **every** consumer of ``MicroCosts`` —
+  the closed-form tables, :class:`~repro.scenarios.engine.CampaignEngine`,
+  and the vmapped replay kernel in ``scenarios/trajectory.py`` — runs
+  under the workload without further dispatch. Because the engine and
+  the kernel share the one memoized record, trial-for-trial parity holds
+  under every workload by construction.
+
+Register implementations with :func:`repro.workloads.registry.register`;
+anything in the registry is immediately campaign-able
+(``CampaignEngine(spec, approach, workload="my_workload")``), Monte-
+Carlo-able (``mc_trajectories(..., workload=...)``) and appears in the
+benchmark's per-workload overhead matrix.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import numpy as np
+
+#: shard counts every builtin tabulates its surfaces at (powers of two up
+#: to a pod slice; :meth:`WorkloadCostTable.at` interpolates between them)
+DEFAULT_SHARD_GRID: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+@dataclass(frozen=True)
+class WorkloadCostTable:
+    """One workload's vectorised cost surfaces, tabulated over shard counts.
+
+    All per-shard-count fields are parallel tuples over ``n_shards`` (a
+    frozen dataclass of tuples stays hashable, so tables can key jit
+    caches the way :class:`~repro.strategies.base.StrategyCostTable`
+    does); :meth:`surfaces` exposes them as jnp arrays for vectorised
+    consumers and :meth:`at` interpolates every surface at one shard
+    count. Scalar sizing fields feed the micro-cost contract:
+
+    ``z``
+        dependency fan-in of the workload's reduction topology (the
+        hybrid strategy's Rules 1-3 input);
+    ``state_bytes_per_shard``
+        S_d — the bytes one shard stages / checkpoints (recovery payload);
+    ``payload_bytes``
+        S_p — the bytes the migration metadata scales with (the live
+        process image a proactive mechanism actually moves).
+    """
+
+    workload: str
+    z: int
+    state_bytes_per_shard: int
+    payload_bytes: int
+    n_shards: Tuple[int, ...]
+    step_time_s: Tuple[float, ...]  # synchronous step seconds at n shards
+    ckpt_write_s: Tuple[float, ...]  # full-job checkpoint write seconds
+    ckpt_restore_s: Tuple[float, ...]  # checkpoint restore seconds
+    migrate_shard_s: Tuple[float, ...]  # move one victim shard's state
+    rebalance_shard_s: Tuple[float, ...]  # spread one shard over survivors
+
+    SURFACE_FIELDS = (
+        "step_time_s",
+        "ckpt_write_s",
+        "ckpt_restore_s",
+        "migrate_shard_s",
+        "rebalance_shard_s",
+    )
+
+    def __post_init__(self):
+        n = len(self.n_shards)
+        for f in self.SURFACE_FIELDS:
+            if len(getattr(self, f)) != n:
+                raise ValueError(
+                    f"{self.workload}: surface {f!r} has {len(getattr(self, f))} "
+                    f"entries for {n} shard counts"
+                )
+
+    def surfaces(self) -> Dict[str, "object"]:
+        """The cost surfaces as jnp arrays keyed by field name (plus the
+        ``n_shards`` grid) — the structure-of-arrays form the batched
+        consumers index/interpolate under ``jax.vmap``."""
+        import jax.numpy as jnp
+
+        # default float dtype: f64 under enable_x64, f32 otherwise
+        out = {"n_shards": jnp.asarray(np.asarray(self.n_shards, np.float64))}
+        for f in self.SURFACE_FIELDS:
+            out[f] = jnp.asarray(np.asarray(getattr(self, f), np.float64))
+        return out
+
+    def at(self, n_shards) -> Dict[str, "object"]:
+        """Every surface linearly interpolated at ``n_shards`` (scalar or
+        array; jnp arithmetic, so the result is vmap/jit-friendly)."""
+        import jax.numpy as jnp
+
+        grid = jnp.asarray(np.asarray(self.n_shards, np.float64))
+        q = jnp.asarray(np.asarray(n_shards, np.float64))
+        return {
+            f: jnp.interp(q, grid, jnp.asarray(np.asarray(getattr(self, f), np.float64)))
+            for f in self.SURFACE_FIELDS
+        }
+
+    def step_time(self, n_shards):
+        """``step_time_s`` interpolated at ``n_shards`` (vectorised)."""
+        return self.at(n_shards)["step_time_s"]
+
+
+class Workload(ABC):
+    """Base class for every workload model.
+
+    Implementations override :meth:`cost_table`; the default
+    :meth:`micro` then prices the standard micro-cost record from the
+    table's calibrated sizes — executing the real migration machinery at
+    the workload's Z and staging/checkpointing the workload's state
+    bytes — which is all the engine, the closed-form accountant and the
+    replay kernel need. Override :meth:`micro` only to change *how* the
+    record is derived (the ``analytic`` anchor keeps the seed call
+    verbatim)."""
+
+    name: str = "?"
+    description: str = ""
+
+    @abstractmethod
+    def cost_table(
+        self, profile: str = "placentia", n_nodes: int = 4
+    ) -> WorkloadCostTable:
+        """Tabulate this workload's cost surfaces on one cluster profile."""
+
+    def micro(self, profile: str = "placentia", n_nodes: int = 4):
+        """The workload-calibrated :class:`~repro.core.sim.MicroCosts`.
+
+        ``measure_micro`` is memoized on its full argument tuple, so
+        every consumer of the same (workload, profile, n_nodes) shares
+        one record — the engine-vs-kernel parity guarantee."""
+        from repro.core.sim import measure_micro
+
+        t = self.cost_table(profile, n_nodes)
+        return measure_micro(
+            profile,
+            n_nodes=n_nodes,
+            z=t.z,
+            s_d_bytes=t.state_bytes_per_shard,
+            s_p_bytes=t.payload_bytes,
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+def _transfer_surfaces(
+    profile, state_bytes_per_shard: int, n_shards: Tuple[int, ...]
+) -> Dict[str, Tuple[float, ...]]:
+    """Shared byte→seconds arithmetic for checkpoint/migration surfaces.
+
+    Checkpoint payload is every shard's state written to (read from) the
+    stable-storage path; migration moves one victim shard's state over
+    the node NIC; a rebalance streams that shard to its ``n-1`` survivors
+    in parallel slices (so it cheapens with the fleet, but never below
+    one NIC transfer of a slice)."""
+    s = float(state_bytes_per_shard)
+    ckpt_w, ckpt_r, mig, reb = [], [], [], []
+    for n in n_shards:
+        total = s * n
+        ckpt_w.append(total / profile.ckpt_server_bw)
+        ckpt_r.append(total / profile.ckpt_restore_bw)
+        mig.append(s / profile.node_bw + s / profile.ser_bytes_per_s)
+        reb.append(s / max(n - 1, 1) / profile.node_bw * n + profile.msg_latency_s * n)
+    return {
+        "ckpt_write_s": tuple(ckpt_w),
+        "ckpt_restore_s": tuple(ckpt_r),
+        "migrate_shard_s": tuple(mig),
+        "rebalance_shard_s": tuple(reb),
+    }

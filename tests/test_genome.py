@@ -1,0 +1,130 @@
+"""Direct tests for the genome search job (``repro.data.genome``):
+chunk-overlap boundary behaviour, reverse-complement ground-truth
+recovery, and combiner determinism — previously exercised only
+indirectly through ``examples/genome_search.py``."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.data.genome import (
+    COMPLEMENT,
+    GenomeSearchJob,
+    make_genome,
+    reverse_complement,
+    search_chunk,
+)
+
+
+def _run_all(job):
+    states = job.sub_job_states()
+    for st in states:
+        while job.run_sub_job_step(st):
+            pass
+    return states, job.combine(states)
+
+
+def _plant(genome, pat, pos):
+    genome[pos : pos + len(pat)] = pat
+
+
+# ----------------------------------------------------- chunk boundaries ---
+def test_boundary_straddling_hits_found_exactly_once():
+    """Patterns straddling (or starting exactly on) chunk boundaries are
+    found once — the overlap window catches them, the cursor-based dedup
+    plus the combiner's set drop the duplicates."""
+    rng = np.random.default_rng(42)
+    G = 4000
+    genome = rng.integers(0, 4, size=G, dtype=np.uint8)
+    pat = rng.integers(0, 4, size=20, dtype=np.uint8)
+    job = GenomeSearchJob(genome, [pat], n_search=2, chunks_per_node=2)
+    size = G // 4  # 4 chunks: boundaries at 1000/2000/3000
+
+    plants = [
+        size - 10,  # straddles an intra-node chunk boundary
+        2 * size,  # starts exactly on the inter-node boundary
+        3 * size - 5,  # straddles the last intra-node boundary
+    ]
+    for pos in plants:
+        _plant(genome, pat, pos)
+
+    _, got = _run_all(job)
+    starts = [h[1] for h in got]
+    for pos in plants:
+        assert starts.count(pos) == 1, (pos, starts)
+
+    # strongest form: the chunked+overlapped sweep finds exactly the hits
+    # a single unchunked pass over the whole genome finds
+    _, reference = _run_all(GenomeSearchJob(genome, [pat], n_search=1, chunks_per_node=1))
+    assert got == reference
+
+
+def test_chunk_bounds_cover_genome_with_overlap():
+    job = GenomeSearchJob(np.zeros(4000, np.uint8), [], n_search=2, chunks_per_node=2)
+    bounds = [job.chunk_bounds(n, c) for n in range(2) for c in range(2)]
+    assert bounds[0] == (0, 1031)  # 31-base overlap into the next chunk
+    assert bounds[-1] == (3000, 4000)  # last chunk clips to the genome end
+    assert job.chunk_bounds(0, 2) is None  # cursor past the node's share
+    # contiguous coverage: every next chunk starts where the previous
+    # chunk's un-overlapped span ends
+    assert all(b[0] == a[0] + 1000 for a, b in zip(bounds, bounds[1:]))
+
+
+# ------------------------------------------------- reverse complement ---
+def test_reverse_complement_involution_and_alphabet():
+    rng = np.random.default_rng(3)
+    seq = rng.integers(0, 4, size=25, dtype=np.uint8)
+    rc = reverse_complement(seq)
+    assert np.array_equal(reverse_complement(rc), seq)  # an involution
+    assert np.array_equal(COMPLEMENT[COMPLEMENT], np.arange(4, dtype=np.uint8))
+
+
+def test_planted_reverse_strand_truth_recovered():
+    """make_genome plants each pattern on both strands; the search must
+    recover every verified ground-truth entry, minus-strand included."""
+    genome, patterns, truth = make_genome(20000, n_patterns=6, seed=2)
+    assert any(strand == "-" for (_, _, strand) in truth)
+    job = GenomeSearchJob(genome, patterns, n_search=3)
+    _, got = _run_all(job)
+    found = {(h[1], h[3], h[4]) for h in got}
+    missing = truth - found
+    assert not missing, missing
+
+
+def test_minus_strand_hit_matches_reverse_complement_of_pattern():
+    """A '-' hit means the reverse complement of the pattern occurs at the
+    reported span on the forward strand."""
+    genome, patterns, truth = make_genome(8000, n_patterns=3, seed=5)
+    hits = search_chunk(genome, patterns)
+    minus = [h for h in hits if h[4] == "-"]
+    assert minus
+    for (_, start, end, pid, _) in minus:
+        span = genome[start : end + 1]
+        assert np.array_equal(span, reverse_complement(patterns[pid]))
+
+
+# ------------------------------------------------------------ combiner ---
+def test_combiner_output_sorted_and_order_invariant():
+    """The combined hit table is one deterministic sorted relation: state
+    order and per-state hit order must not matter (a migrated sub-job
+    reports its partial hits in whatever order it accumulated them)."""
+    genome, patterns, _ = make_genome(12000, n_patterns=5, seed=9)
+    job = GenomeSearchJob(genome, patterns, n_search=3)
+    states, want = _run_all(job)
+    assert want == sorted(want)
+
+    shuffled = [dict(st, hits=list(st["hits"])) for st in states]
+    random.Random(0).shuffle(shuffled)
+    for st in shuffled:
+        random.Random(st["node"]).shuffle(st["hits"])
+    assert job.combine(shuffled) == want
+
+
+def test_combiner_drops_exact_duplicates():
+    job = GenomeSearchJob(np.zeros(100, np.uint8), [], n_search=2)
+    rec = ("chrI", 5, 20, 0, "+")
+    states = [
+        {"node": 0, "cursor": 1, "hits": [rec, rec]},
+        {"node": 1, "cursor": 1, "hits": [rec]},
+    ]
+    assert job.combine(states) == [rec]
