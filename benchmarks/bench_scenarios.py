@@ -1,7 +1,7 @@
 """Scenario-engine benchmark: every registered campaign under every FT
 strategy, plus the vectorised Monte-Carlo speedup certifications.
 
-Emits a JSON report (BENCH_OUT/scenarios.json) with four sections:
+Emits a JSON report (BENCH_OUT/scenarios.json) with these sections:
 
   paper_exactness   the two Table 1/2 scenarios re-expressed as registered
                     specs must match the seed simulator's closed-form
@@ -31,12 +31,28 @@ Emits a JSON report (BENCH_OUT/scenarios.json) with four sections:
                     checkpointing >> multi-agent overhead — on the
                     genome_search (and analytic) workloads, and reports
                     every (workload, family) cell where it inverts.
+  profiling         the vmapped replay kernel's compile-vs-execute split
+                    (jit AOT lower/compile vs steady-state execution) and
+                    the headline seeds/sec throughput, plus measured
+                    Pallas step-time surfaces per shard count next to the
+                    analytic ones from workloads/builtin.py;
+  observability     one engine campaign recorded as a structured trace
+                    and exported as Chrome-trace JSON (open in Perfetto),
+                    the engine-trace == kernel-trace differential check,
+                    a per-campaign metric frame whose components sum
+                    exactly to the billed total, and the aggregated
+                    p5/p50/p95 metric frames from the batched MC path.
+
+A schema-versioned summary of the headline numbers (seeds/sec, speedup
+certs, per-workload overhead matrix) is additionally written to
+BENCH_scenarios.json at the repo root — the perf-trajectory record.
 
 Usage:
   python benchmarks/bench_scenarios.py [--seeds 2000] [--dry-run]
 
 --dry-run swaps in tiny trial counts and skips the speedup assertions —
-the CI smoke path.
+the CI smoke path (it still exercises the profiling and observability
+sections end to end).
 """
 from __future__ import annotations
 
@@ -44,7 +60,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -59,6 +74,7 @@ from repro.scenarios import (
     registry,
 )
 from repro.core.failure import PREDICTABLE_FRACTION
+from repro.obs.profile import profile_replay, stopwatch
 from repro.scenarios.engine import CampaignEngine
 from repro.scenarios.montecarlo import params_from_scenario
 from repro.strategies import names as strategy_names
@@ -81,6 +97,10 @@ MULTI_AGENT = ("agent", "core", "hybrid")
 # asserted on its own application and on the analytic anchor; the other
 # workloads only *report* where it inverts
 ORDERING_ASSERT_WORKLOADS = ("analytic", "genome_search")
+# observability section: small family so the exported trace stays readable
+OBS_FAMILY = "flaky_node"
+BENCH_SCHEMA_VERSION = 1
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def check_paper_exactness(micro) -> dict:
@@ -150,13 +170,13 @@ def run_montecarlo(micro, n_seeds: int, assert_speedup: bool) -> dict:
 
         # warm-up compiles the jitted program; the paid path is steady-state
         mc_totals(params, n_seeds=n_seeds, seed=0)
-        t0 = time.perf_counter()
-        mc = mc_totals(params, n_seeds=n_seeds, seed=1)
-        t_vec = time.perf_counter() - t0
+        with stopwatch() as sw_vec:
+            mc = mc_totals(params, n_seeds=n_seeds, seed=1)
+        t_vec = sw_vec.s
 
-        t0 = time.perf_counter()
-        base = python_loop_baseline(params, n_seeds=n_seeds, seed=1)
-        t_loop = time.perf_counter() - t0
+        with stopwatch() as sw_loop:
+            base = python_loop_baseline(params, n_seeds=n_seeds, seed=1)
+        t_loop = sw_loop.s
 
         speedup = t_loop / max(t_vec, 1e-9)
         # same model, same seed count -> means agree to MC error
@@ -229,14 +249,14 @@ def run_trajectories(micro, n_seeds: int, assert_speedup: bool) -> dict:
     # compiled the jitted program for these shapes) vs the per-seed Python
     # engine loop, extrapolated from n_base real engine runs. The timed
     # batched call includes tape compilation — the full cost of the path.
-    t0 = time.perf_counter()
-    mc_trajectories(spec, "central_single", n_seeds=n_seeds, micro=micro)
-    t_traj = time.perf_counter() - t0
+    with stopwatch() as sw_traj:
+        mc_trajectories(spec, "central_single", n_seeds=n_seeds, micro=micro)
+    t_traj = sw_traj.s
     n_base = min(40, n_seeds)
-    t0 = time.perf_counter()
-    for s in range(n_base):
-        CampaignEngine(spec, "central_single", micro=micro, seed=s).run()
-    t_loop = (time.perf_counter() - t0) / n_base * n_seeds
+    with stopwatch() as sw_loop:
+        for s in range(n_base):
+            CampaignEngine(spec, "central_single", micro=micro, seed=s).run()
+    t_loop = sw_loop.s / n_base * n_seeds
     speedup = t_loop / max(t_traj, 1e-9)
     out["speedup"] = {
         "family": SPEEDUP_FAMILY,
@@ -398,6 +418,136 @@ def run_workloads(n_seeds: int, assert_ordering: bool) -> dict:
     return out
 
 
+def run_profiling(micro, n_seeds: int, dry_run: bool) -> dict:
+    """Compile-vs-execute split for the vmapped replay kernel (jit AOT
+    lower/compile vs steady-state execution, seeds/sec throughput) plus
+    measured Pallas step-time surfaces per shard count — the wall-clock
+    siblings of the analytic surfaces in workloads/builtin.py. The
+    backend travels with every number: on CPU the Pallas path runs in
+    interpret mode and is never comparable to a compiled TPU figure."""
+    spec = registry.get(SPEEDUP_FAMILY)
+    out = {"replay": {}, "kernels": {}}
+    for strat in TRAJECTORY_STRATEGIES:
+        out["replay"][strat] = profile_replay(spec, strat, n_seeds=n_seeds, micro=micro)
+
+    # interpret-mode Pallas is slow: tiny shapes in dry-run, modest in full
+    shards = (1, 2) if dry_run else (1, 2, 4)
+    shape = (
+        dict(batch=2, seq_len=32, heads=2, head_dim=16)
+        if dry_run
+        else dict(batch=4, seq_len=128, heads=2, head_dim=32)
+    )
+    for wl_name in workload_registry.names():
+        wl = workload_registry.get(wl_name)
+        surf = wl.measured_step_surface(n_shards=shards, **shape)
+        if surf is None:
+            continue  # no kernel hot path (analytic, genome_search)
+        table = wl.cost_table("placentia", n_nodes=4)
+        surf["analytic_step_time_s"] = [
+            round(float(table.step_time(n)), 6) for n in shards
+        ]
+        out["kernels"][wl_name] = surf
+    return out
+
+
+def run_observability(micro, n_seeds: int) -> dict:
+    """One campaign end to end through the obs layer: record an engine
+    trace, export it as Chrome-trace JSON (open in Perfetto), check the
+    kernel-side reconstruction reproduces it event for event, and check
+    the metric frame's components sum exactly to the billed total. Also
+    aggregates p5/p50/p95 metric frames over the batched MC path."""
+    from repro.obs.export import write_chrome_trace
+    from repro.obs.metrics import availability_timeline, frame_from_result, verdict_ledger
+    from repro.obs.trace import reconstruct_traces
+
+    spec = registry.get(OBS_FAMILY)
+    res = CampaignEngine(spec, "core", micro=micro, seed=0, trace=True).run()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    trace_path = os.path.join(OUT_DIR, f"trace_{OBS_FAMILY}_core.json")
+    write_chrome_trace(res.trace, trace_path)
+
+    # engine trace == kernel-reconstructed trace, event for event (the
+    # full family x strategy sweep lives in tests/test_obs.py)
+    parity = True
+    for strat in ("central_single", "core"):
+        ktr = reconstruct_traces(spec, strat, n_seeds=2, micro=micro)
+        for s in range(2):
+            etr = CampaignEngine(spec, strat, micro=micro, seed=s, trace=True).run().trace
+            parity &= etr.comparable() == ktr[s].comparable()
+
+    fr = frame_from_result(spec, res, seed=0)
+    mc = mc_trajectories(spec, "core", micro=micro, n_seeds=n_seeds)
+    return {
+        "family": OBS_FAMILY,
+        "trace": {
+            "path": trace_path,
+            "n_events": len(res.trace.events),
+            "counts": res.trace.counts(),
+            "survived": res.trace.survived,
+        },
+        "trace_parity": bool(parity),
+        "metric_frame": {
+            "breakdown": fr.breakdown(),
+            "sums_to_billed_total": bool(fr.total_s() == res.total_s),
+            "overhead_frac": round(fr.overhead_frac, 6),
+        },
+        "aggregated_frames": mc["frames"],
+        "verdict_ledger": verdict_ledger(res.trace),
+        "availability_points": len(availability_timeline(res.trace)),
+    }
+
+
+def write_bench_record(report: dict, dry_run: bool) -> str:
+    """The schema-versioned perf-trajectory record at the repo root:
+    just the headline numbers future sessions diff against."""
+    prof = report["profiling"]["replay"]
+    sp = report["trajectories"]["speedup"]
+    overhead = {
+        wl: {
+            fam: {s: per[s]["overhead_pct"] for s in WORKLOAD_STRATEGIES}
+            for fam, per in rec["families"].items()
+        }
+        for wl, rec in report["workloads"]["workloads"].items()
+    }
+    record = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "generated_by": "benchmarks/bench_scenarios.py",
+        "dry_run": bool(dry_run),
+        "backend": prof["central_single"]["backend"],
+        "replay_profile": {
+            strat: {
+                k: p[k]
+                for k in (
+                    "n_seeds",
+                    "tape_compile_s",
+                    "lower_s",
+                    "compile_s",
+                    "execute_s",
+                    "seeds_per_s",
+                    "compile_over_execute",
+                )
+            }
+            for strat, p in prof.items()
+        },
+        "seeds_per_s": prof["central_single"]["seeds_per_s"],
+        "speedup": {
+            "montecarlo": {
+                s: mc["speedup"] for s, mc in report["montecarlo"]["strategies"].items()
+            },
+            "trajectory": sp["speedup"],
+            "min_required": MIN_SPEEDUP,
+            "asserted": report["trajectories"]["asserted"],
+        },
+        "trace_parity": report["observability"]["trace_parity"],
+        "workload_overhead_pct": overhead,
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=lambda o: o.item())
+        f.write("\n")
+    return path
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seeds", type=int, default=2000, help="Monte-Carlo trials")
@@ -416,6 +566,10 @@ def main(argv=None):
     # the trajectory section's program count
     n_wl = 16 if args.dry_run else max(min(args.seeds, 256), 64)
 
+    # profiling re-lowers the replay program from scratch: modest seed
+    # counts keep the AOT split readable without re-paying the MC budget
+    n_prof = 64 if args.dry_run else max(min(args.seeds, 1024), 256)
+
     report = {
         "paper_exactness": check_paper_exactness(micro),
         "campaigns": run_campaigns(micro),
@@ -423,6 +577,8 @@ def main(argv=None):
         "trajectories": run_trajectories(micro, n_seeds, assert_speedup=not args.dry_run),
         "detectors": run_detectors(n_det, assert_bounds=not args.dry_run),
         "workloads": run_workloads(n_wl, assert_ordering=not args.dry_run),
+        "profiling": run_profiling(micro, n_prof, dry_run=args.dry_run),
+        "observability": run_observability(micro, n_seeds=n_wl),
     }
 
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -430,8 +586,10 @@ def main(argv=None):
     with open(path, "w") as f:
         # .item() unboxes stray numpy scalars (np.float64 totals, np.bool_)
         json.dump(report, f, indent=2, default=lambda o: o.item())
+    record_path = write_bench_record(report, dry_run=args.dry_run)
 
     print(path)
+    print(record_path)
     print(f"paper_exactness: {'PASS' if report['paper_exactness']['all_exact'] else 'FAIL'}")
     for name, per in report["campaigns"].items():
         core = per["core"]
@@ -487,6 +645,26 @@ def main(argv=None):
             )
     else:
         print("  WL ordering (checkpointing >> multi-agent) holds on every workload")
+    for strat, p in report["profiling"]["replay"].items():
+        print(
+            f"  PROF[{strat:14s}] backend={p['backend']} "
+            f"compile={p['lower_s'] + p['compile_s']:.3f}s "
+            f"execute={p['execute_s']:.5f}s seeds/s={p['seeds_per_s']:.0f} "
+            f"(compile/execute={p['compile_over_execute']}x)"
+        )
+    for wl_name, surf in report["profiling"]["kernels"].items():
+        pairs = " ".join(
+            f"n={n}:{m}s" for n, m in zip(surf["n_shards"], surf["step_time_s"])
+        )
+        print(f"  PROF[{wl_name:13s}] {surf['kernel']} ({surf['backend']}) {pairs}")
+    obs = report["observability"]
+    print(
+        f"  OBS[{obs['family']}] trace={obs['trace']['n_events']} events -> "
+        f"{obs['trace']['path']}, parity={obs['trace_parity']}, "
+        f"frame_sums_to_total={obs['metric_frame']['sums_to_billed_total']}"
+    )
+    if not (obs["trace_parity"] and obs["metric_frame"]["sums_to_billed_total"]):
+        return 1
     if not report["paper_exactness"]["all_exact"]:
         return 1
     return 0

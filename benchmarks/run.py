@@ -5,9 +5,14 @@ per produced row) and a PASS/FAIL line per paper-claim check.
 """
 from __future__ import annotations
 
+import os
 import sys
-import time
 import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.obs.profile import stopwatch
 
 
 def main() -> None:
@@ -39,10 +44,10 @@ def main() -> None:
     all_checks = {}
     failed = False
     for name, fn in benches:
-        t0 = time.perf_counter()
         try:
-            path, rows, checks = fn()
-            dt = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+            with stopwatch() as sw:
+                path, rows, checks = fn()
+            dt = sw.s * 1e6 / max(len(rows), 1)
             print(f"{name},{dt:.1f},{path}")
             for k, v in checks.items():
                 all_checks[f"{name}.{k}"] = v

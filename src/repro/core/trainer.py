@@ -23,7 +23,6 @@ no-data-loss invariant, asserted in tests via tree_hash.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
@@ -31,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.core.checkpoint import AsyncCheckpointer, CheckpointStore
+from repro.obs.profile import stopwatch
 from repro.core.elastic import replan, reshard_batch
 from repro.core.failure import FailureEvent, PREDICTION_LEAD_S, PREDICTION_PRECISION
 from repro.core.predictor import FailurePredictor
@@ -57,6 +57,9 @@ class FTReport:
     ft_time_s: float = 0.0
     sim_wire_s: float = 0.0
     events: List[dict] = field(default_factory=list)
+    # typed repro.obs.trace.TraceEvent rows, populated when the trainer
+    # was built with trace=True (time axis = the run's simulated seconds)
+    trace_events: List[object] = field(default_factory=list)
 
     @property
     def overhead_fraction(self) -> float:
@@ -81,6 +84,7 @@ class FTTrainer:
         detector: str = "oracle",  # any registered telemetry detector
         workload: Optional[str] = None,  # a repro.workloads name: paces the
         #   failure time axis from the workload's calibrated step-time surface
+        trace: bool = False,  # record typed obs trace events on the report
     ):
         self.train_step = jax.jit(train_step)
         self.init_state = init_state
@@ -146,6 +150,12 @@ class FTTrainer:
             self.workload = resolve_workload(workload)
             table = self.workload.cost_table(profile, n_nodes=n_hosts)
             self._workload_step_s = float(table.step_time(n_hosts))
+        # opt-in structured tracing (zero overhead off: recorder is None)
+        self.recorder = None
+        if trace:
+            from repro.obs.trace import TraceRecorder
+
+            self.recorder = TraceRecorder()
 
     # -- internal ------------------------------------------------------------
     @property
@@ -229,6 +239,10 @@ class FTTrainer:
                         rep.events.append(
                             {"t": now, "kind": "straggler_rebalance", "hosts": flagged}
                         )
+                        if self.recorder is not None:
+                            self.recorder.emit(
+                                now, "rebalance", hosts=tuple(flagged), reason="straggler"
+                            )
                 predicted = any(
                     v.kind == "failure_predicted" and v.node == home_mod for v in verdicts
                 )
@@ -249,21 +263,31 @@ class FTTrainer:
                                 {"t": now, "kind": "speculative_stage", **srep}
                             )
                 if predicted:
-                    t0 = time.perf_counter()
-                    if self.egress is not None and self.egress.staged is not None:
-                        mrep = self.egress.migrate_prestaged(
-                            self.home, self.state, self.state
-                        )
-                        old_home = self.home
-                        self.home = mrep["to"]
-                        self.state = self.rt.hosts[self.home].shard
-                        self.strategy.rehome(old_home, self.home, self.state)
-                        mrep.setdefault("staging_modelled_s", 0.0)
-                    else:
-                        mrep = self._migrate()
-                    rep.ft_time_s += time.perf_counter() - t0
+                    src = self.home
+                    with stopwatch() as sw:
+                        if self.egress is not None and self.egress.staged is not None:
+                            mrep = self.egress.migrate_prestaged(
+                                self.home, self.state, self.state
+                            )
+                            old_home = self.home
+                            self.home = mrep["to"]
+                            self.state = self.rt.hosts[self.home].shard
+                            self.strategy.rehome(old_home, self.home, self.state)
+                            mrep.setdefault("staging_modelled_s", 0.0)
+                        else:
+                            mrep = self._migrate()
+                    rep.ft_time_s += sw.s
                     rep.sim_wire_s += mrep["reinstate_modelled_s"] + mrep["staging_modelled_s"]
                     rep.migrations += 1
+                    if self.recorder is not None:
+                        self.recorder.emit(
+                            now,
+                            "migrate",
+                            node=src,
+                            target=self.home,
+                            outcome="migrated",
+                            false_claim=not imminent,
+                        )
                     if imminent:
                         fi += 1  # failure lands on the now-empty host
                         self.rt.heartbeats.mark_failed(fq[fi - 1].node)
@@ -277,24 +301,30 @@ class FTTrainer:
                 ev = fq[fi]
                 fi += 1
                 self.rt.heartbeats.mark_failed(ev.node)
+                if self.recorder is not None:
+                    self.recorder.emit(
+                        now, "failure", node=ev.node, cause=ev.cause,
+                        predictable=ev.predictable,
+                    )
                 if ev.node == self.home % self.rt.n_active:
                     # state lost: reactive backstop
-                    t0 = time.perf_counter()
-                    if self.async_ckpt:
-                        self.async_ckpt.wait()
-                    lstep = self.store.latest_step()
-                    if lstep is None:
-                        # strategies that keep no checkpoint cadence (cold
-                        # restart, custom no-backstop strategies) restart
-                        # from scratch — everything re-executes
-                        assert (
-                            self.strategy is None or not self.strategy.wants_checkpoints
-                        ), "unpredicted failure before first checkpoint"
-                        self.state = self.init_state()
-                        lstep = 0
-                    else:
-                        self.state, rrep = self.store.restore(lstep, self.state)
-                    rep.ft_time_s += time.perf_counter() - t0
+                    with stopwatch() as sw:
+                        if self.async_ckpt:
+                            self.async_ckpt.wait()
+                        lstep = self.store.latest_step()
+                        if lstep is None:
+                            # strategies that keep no checkpoint cadence (cold
+                            # restart, custom no-backstop strategies) restart
+                            # from scratch — everything re-executes
+                            assert (
+                                self.strategy is None
+                                or not self.strategy.wants_checkpoints
+                            ), "unpredicted failure before first checkpoint"
+                            self.state = self.init_state()
+                            lstep = 0
+                        else:
+                            self.state, rrep = self.store.restore(lstep, self.state)
+                    rep.ft_time_s += sw.s
                     rep.restores += 1
                     rep.steps_reexecuted += step - lstep
                     step = lstep
@@ -314,11 +344,21 @@ class FTTrainer:
                         target = alive[0]
                         rep.events.append({"t": now, "kind": "elastic_shrink",
                                            "alive": alive})
+                        if self.recorder is not None:
+                            self.recorder.emit(
+                                now, "rebalance", hosts=tuple(alive),
+                                reason="elastic_shrink",
+                            )
                     self.rt.occupy(target, self.state, "restored")
                     old_home, self.home = self.home, target
                     if self.strategy is not None:
                         self.strategy.rehome(old_home, target, self.state)
                     rep.events.append({"t": now, "kind": "unpredicted_failure_restore"})
+                    if self.recorder is not None:
+                        self.recorder.emit(
+                            now, "migrate", node=old_home, target=target,
+                            outcome="restored",
+                        )
                 self.rt.heartbeats.revive(ev.node)  # node returns to pool later
 
             # --- checkpoint cadence -----------------------------------------
@@ -327,21 +367,25 @@ class FTTrainer:
                 and self.strategy.wants_checkpoints
                 and step % self.ckpt_every == 0
             ):
-                t0 = time.perf_counter()
-                if self.async_ckpt:
-                    self.async_ckpt.save_async(self.state, step, incremental_against=last_ckpt_step)
-                else:
-                    self.store.save(self.state, step, incremental_against=last_ckpt_step)
-                rep.ft_time_s += time.perf_counter() - t0
+                with stopwatch() as sw:
+                    if self.async_ckpt:
+                        self.async_ckpt.save_async(
+                            self.state, step, incremental_against=last_ckpt_step
+                        )
+                    else:
+                        self.store.save(self.state, step, incremental_against=last_ckpt_step)
+                rep.ft_time_s += sw.s
                 last_ckpt_step = step
                 rep.checkpoints += 1
+                if self.recorder is not None:
+                    self.recorder.emit(now, "ckpt_write", step=step)
 
             # --- the real training step --------------------------------------
-            t0 = time.perf_counter()
-            batch = self.make_batch(step)
-            self.state, metrics = self.train_step(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
-            rep.train_time_s += time.perf_counter() - t0
+            with stopwatch() as sw:
+                batch = self.make_batch(step)
+                self.state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            rep.train_time_s += sw.s
             rep.steps_run += 1
             step += 1
             # keep the shard view in sync (zero-copy reference)
@@ -352,4 +396,8 @@ class FTTrainer:
         if self.async_ckpt:
             self.async_ckpt.wait()
         rep.events.append({"final_hash": tree_hash(jax.tree.map(np.asarray, self.state))})
+        if self.recorder is not None:
+            from repro.obs.trace import TraceEvent
+
+            rep.trace_events = sorted(self.recorder.events, key=TraceEvent.sort_key)
         return rep

@@ -108,6 +108,9 @@ class CampaignResult:
     detector: str = "oracle"
     workload: str = "analytic"
     events: List[Dict] = field(default_factory=list)
+    # populated only when the engine ran with trace=True; never serialised
+    # by to_dict, so campaign records stay byte-identical
+    trace: Optional[object] = None  # repro.obs.trace.CampaignTrace
 
     def to_dict(self) -> Dict:
         d = {
@@ -151,6 +154,7 @@ class CampaignEngine:
         placement: Optional[str] = None,
         detector: "str | Detector" = "oracle",
         workload: "str | Workload | None" = None,
+        trace: bool = False,
     ):
         try:
             cls = strategy_registry.get_class(approach)
@@ -176,6 +180,8 @@ class CampaignEngine:
         self.detector = (
             detector if isinstance(detector, Detector) else detector_registry.get(detector)
         )
+        # structured event timeline (repro.obs): opt-in, zero overhead off
+        self.trace = bool(trace)
 
     # ------------------------------------------------------------------
     def _build(self) -> ClusterRuntime:
@@ -217,6 +223,12 @@ class CampaignEngine:
             seed=self.seed,
         )
         oracle = self.detector.name == "oracle"
+        # tracing off -> rec_ is None and every emit site is a single `if`
+        rec_ = None
+        if self.trace:
+            from repro.obs.trace import TraceRecorder
+
+            rec_ = TraceRecorder()
 
         strikes: Dict[int, int] = {}
         pending: Dict[int, float] = {}  # host -> repair completion time
@@ -264,6 +276,8 @@ class CampaignEngine:
                     del pending[h]
                     if rt.provision_spare(h):
                         res.n_reprovisioned += 1
+                        if rec_ is not None:  # timestamped at completion
+                            rec_.emit(tr, "provision", node=h)
 
             # cascade children chase the host their parent's sub-job
             # migrated to — and only exist if it migrated at all
@@ -286,6 +300,8 @@ class CampaignEngine:
                 cause=tape.causes[j],
                 during_checkpoint=bool(tape.during_ckpt[j]),
             )
+            if rec_ is not None:
+                rec_.emit(t, "failure", node=host, cause=ev.cause, predictable=ev.predictable)
             strikes[host] = strikes.get(host, 0) + 1
             permanent = spec.repair_s is None or strikes[host] >= spec.max_strikes
 
@@ -306,6 +322,8 @@ class CampaignEngine:
                     res.events.append(
                         {"t": float(t), "node": host, "cause": ev.cause, "outcome": "stranded"}
                     )
+                    if rec_ is not None:
+                        rec_.emit(t, "stranded", node=host)
                     break
                 # the detector's verdict — not the oracle bit — decides
                 # whether the strategy ACTS on a lead window; but a lead
@@ -345,10 +363,24 @@ class CampaignEngine:
                 if not oracle:  # ground truth vs the detector's claim
                     rec["predicted"] = predicted
                 res.events.append(rec)
+                if rec_ is not None:
+                    rec_.emit(
+                        t,
+                        "verdict",
+                        node=host,
+                        detector=self.detector.name,
+                        predicted=predicted,
+                        saved=bool(saved and strat.proactive),
+                    )
+                    rec_.emit(
+                        t, "migrate", node=host, target=int(out.new_host), outcome=out.outcome
+                    )
 
             rt.fail(host, permanent=permanent)
             if permanent:
                 res.n_blacklisted += 1
+                if rec_ is not None:
+                    rec_.emit(t, "blacklist", node=host)
             elif spec.repair_s is not None:
                 pending[host] = t + float(tape.repair_draws[draw_i])
                 draw_i += 1
@@ -359,6 +391,8 @@ class CampaignEngine:
             for h, tr in sorted(pending.items(), key=lambda kv: (kv[1], kv[0])):
                 if tr < spec.horizon_s and rt.provision_spare(h):
                     res.n_reprovisioned += 1
+                    if rec_ is not None:
+                        rec_.emit(tr, "provision", node=h)
 
         # background probing accrues only while the campaign is running —
         # a lost campaign stops probing at failed_at_s
@@ -379,5 +413,23 @@ class CampaignEngine:
                 + res.overhead_s
                 + res.probe_s
                 + res.slowdown_s
+            )
+
+        if rec_ is not None:
+            from repro.strategies.base import CostContext
+
+            table = strat.cost_table(
+                CostContext(micro=self.micro, period_h=spec.period_s / 3600.0)
+            )
+            res.trace = rec_.finalize(
+                spec,
+                approach=self.approach,
+                seed=self.seed,
+                detector=self.detector.name,
+                workload=self.workload.name,
+                survived=res.survived,
+                failed_at_s=res.failed_at_s,
+                mode_window=table.mode == "window",
+                flags_stragglers=self.detector.flags_stragglers,
             )
         return res

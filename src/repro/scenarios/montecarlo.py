@@ -255,9 +255,17 @@ def mc_trajectories(
     compilation across strategies; the same batch replays under any
     workload (``workload`` picks the registered cost model the trials
     are billed with when ``micro`` is not given — tapes are
-    workload-independent, only the billing changes)."""
+    workload-independent, only the billing changes).
+
+    Every run also attaches ``"frames"``: the cross-seed time-in-state
+    distribution (:func:`repro.obs.metrics.aggregate_frames` over
+    per-campaign :class:`~repro.obs.metrics.MetricFrame` decompositions)
+    — p5/p50/p95 per component for this (family × strategy × workload ×
+    detector) cell, each frame summing to its billed total exactly."""
+    from repro.obs.metrics import aggregate_frames, frames_from_replay
     from repro.scenarios import registry
     from repro.scenarios.trajectory import compile_batch, replay_batch
+    from repro.telemetry.detector import Detector
     from repro.workloads import resolve as resolve_workload
 
     spec = registry.get(spec) if isinstance(spec, str) else spec
@@ -273,6 +281,14 @@ def mc_trajectories(
         placement=placement,
         detector=detector,
         workload=workload,
+    )
+    frames = frames_from_replay(
+        spec,
+        out,
+        getattr(strategy, "name", strategy),
+        detector=detector.name if isinstance(detector, Detector) else detector,
+        workload=workload.name,
+        base_seed=seed,
     )
     totals = out["total_s"]
     ok = out["survived"]
@@ -302,5 +318,6 @@ def mc_trajectories(
                 "n_reprovisioned",
             )
         },
+        "frames": aggregate_frames(frames),
         "trials": out,
     }

@@ -62,6 +62,7 @@ __all__ = [
     "compile_tape",
     "compile_batch",
     "replay_batch",
+    "replay_program",
 ]
 
 
@@ -304,6 +305,10 @@ class _ReplayStatic:
     repair_none: bool
     partition_aware: bool
     rules_agent_small: bool  # Rules 2-3 verdict for the (static) payload size
+    # when True the scan additionally stacks per-slot decision arrays
+    # (processed/handled/victim/target/...) for trace reconstruction — a
+    # separate cached program, so the default replay path is unchanged
+    record: bool = False
 
 
 @lru_cache(maxsize=128)
@@ -500,6 +505,22 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             fired = c["fired"].at[j].set(handled)
             tgt_rec = c["tgt_rec"].at[j].set(jnp.where(handled, tgt, -1).astype(jnp.int32))
 
+            # per-slot decision record for trace reconstruction: exactly
+            # the facts the engine's emit sites see (resolved victim,
+            # chosen target, scheduled repair completion)
+            y = None
+            if static.record:
+                y = dict(
+                    processed=processed,
+                    handled=handled,
+                    victim=jnp.where(processed, v, -1).astype(jnp.int32),
+                    target=jnp.where(handled, tgt, -1).astype(jnp.int32),
+                    blacklisted=newly_black,
+                    repair_sched=sched,
+                    repair_at=jnp.where(sched, t + rdraw, jnp.inf),
+                    stranded=stranded,
+                )
+
             return (
                 dict(
                     down=down,
@@ -525,7 +546,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
                     fired=fired,
                     tgt_rec=tgt_rec,
                 ),
-                None,
+                y,
             )
 
         xs = (
@@ -540,7 +561,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             p_act,
             p_comp,
         )
-        c, _ = jax.lax.scan(step, init, xs)
+        c, ys = jax.lax.scan(step, init, xs)
 
         # repairs still pending at the end of the stream complete (and are
         # counted) if they land inside the horizon — unless the campaign
@@ -556,7 +577,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             horizon + c["lost"] + c["reinstate"] + c["overhead"] + probe,
             jnp.nan,
         )
-        return dict(
+        out = dict(
             survived=c["alive"],
             total_s=total,
             failed_at_s=jnp.where(c["alive"], jnp.nan, c["failed_at"]),
@@ -570,6 +591,10 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             n_blacklisted=c["n_blacklisted"],
             n_reprovisioned=n_reprovisioned,
         )
+        if static.record:
+            for k, v in ys.items():
+                out["slot_" + k] = v
+        return out
 
     return jax.jit(jax.vmap(one_seed))
 
@@ -589,7 +614,7 @@ def _default_micro(workload, profile: str, n_nodes: int):
     return workload.micro(profile, n_nodes=n_nodes)
 
 
-def replay_batch(
+def _resolve_program(
     spec: ScenarioSpec,
     batch: TapeBatch,
     strategy,
@@ -600,35 +625,17 @@ def replay_batch(
     payload_elems: int = 1 << 10,
     detector="oracle",
     workload=None,
-) -> Dict[str, np.ndarray]:
-    """Replay a compiled :class:`TapeBatch` under one strategy's cost table.
-
-    ``strategy`` is a registered name (aliases ok) or a strategy
-    instance; ``detector`` likewise (a :class:`~repro.telemetry.detector.
-    Detector` name or instance); ``workload`` a :mod:`repro.workloads`
-    name or instance supplying the micro-costs when none are given
-    (default: the spec's declared workload, then ``analytic`` — the seed
-    cost model bit-for-bit). Because the engine resolves the identical
-    record, trial-for-trial parity holds under every workload.
-    Per-event verdict tapes are pre-sampled
-    per seed in schedule order — the exact draws the Python engine makes —
-    and fed to the kernel alongside the ground-truth ``predictable`` bits
-    (a failure is *saved* only when claimed AND a real lead window
-    existed; every claim pays the prediction work), so the replay stays
-    trial-for-trial identical to
-    ``CampaignEngine(spec, strategy, seed=k, detector=...)`` under any
-    detector. Returns per-seed numpy arrays keyed like
-    :class:`~repro.scenarios.engine.CampaignResult` fields (``total_s`` /
-    ``failed_at_s`` are NaN where inapplicable). One jitted vmapped
-    program evaluates every seed; programs are cached per
-    (scenario-shape, cost-table) pair, so repeated calls only pay the
-    fold itself."""
-    import jax
+    record_slots: bool = False,
+):
+    """Shared front half of the replay path: resolve strategy / detector /
+    workload micro, pre-sample per-seed verdict tapes, build (or fetch
+    from cache) the jitted vmapped program. Returns
+    ``(fn, args, detector, verdicts)``; ``fn(*args)`` — and any
+    ``fn.lower(*args)`` — must run under ``enable_x64``."""
     from jax.experimental import enable_x64
 
     from repro.telemetry import registry as detector_registry
     from repro.telemetry.detector import Detector
-    from repro.scenarios.spec import degrade_slowdown_s
     from repro.workloads import resolve as resolve_workload
 
     if isinstance(strategy, FaultToleranceStrategy):
@@ -670,21 +677,124 @@ def replay_batch(
         repair_none=spec.repair_s is None,
         partition_aware=placement == "partition-aware",
         rules_agent_small=_payload_bytes(payload_elems) <= SD_THRESHOLD_BYTES,
+        record=record_slots,
+    )
+    with enable_x64():  # program construction traces x64 constants
+        fn = _compiled_replayer(static, table)
+    args = (
+        batch.times,
+        batch.victim,
+        batch.parent,
+        batch.predictable,
+        verdicts,
+        batch.during_ckpt,
+        batch.valid,
+        batch.repair_draws,
+        batch.part_active,
+        batch.part_comp,
+    )
+    return fn, args, det, verdicts
+
+
+def replay_program(
+    spec: ScenarioSpec,
+    batch: TapeBatch,
+    strategy,
+    *,
+    micro=None,
+    profile: str = "placentia",
+    placement: Optional[str] = None,
+    payload_elems: int = 1 << 10,
+    detector="oracle",
+    workload=None,
+    record_slots: bool = False,
+) -> Tuple:
+    """The AOT-profilable handle on the replay kernel: ``(fn, args)``.
+
+    ``fn`` is the cached jitted vmapped program and ``args`` the exact
+    arrays :func:`replay_batch` would feed it, so
+    ``fn.lower(*args).compile()`` splits compile from execute time —
+    what :func:`repro.obs.profile.profile_replay` measures. Everything
+    (lower, compile, invoke) must run under
+    ``jax.experimental.enable_x64``, the kernel's required precision."""
+    fn, args, _, _ = _resolve_program(
+        spec,
+        batch,
+        strategy,
+        micro=micro,
+        profile=profile,
+        placement=placement,
+        payload_elems=payload_elems,
+        detector=detector,
+        workload=workload,
+        record_slots=record_slots,
+    )
+    return fn, args
+
+
+def replay_batch(
+    spec: ScenarioSpec,
+    batch: TapeBatch,
+    strategy,
+    *,
+    micro=None,
+    profile: str = "placentia",
+    placement: Optional[str] = None,
+    payload_elems: int = 1 << 10,
+    detector="oracle",
+    workload=None,
+    record_slots: bool = False,
+) -> Dict[str, np.ndarray]:
+    """Replay a compiled :class:`TapeBatch` under one strategy's cost table.
+
+    ``strategy`` is a registered name (aliases ok) or a strategy
+    instance; ``detector`` likewise (a :class:`~repro.telemetry.detector.
+    Detector` name or instance); ``workload`` a :mod:`repro.workloads`
+    name or instance supplying the micro-costs when none are given
+    (default: the spec's declared workload, then ``analytic`` — the seed
+    cost model bit-for-bit). Because the engine resolves the identical
+    record, trial-for-trial parity holds under every workload.
+    Per-event verdict tapes are pre-sampled
+    per seed in schedule order — the exact draws the Python engine makes —
+    and fed to the kernel alongside the ground-truth ``predictable`` bits
+    (a failure is *saved* only when claimed AND a real lead window
+    existed; every claim pays the prediction work), so the replay stays
+    trial-for-trial identical to
+    ``CampaignEngine(spec, strategy, seed=k, detector=...)`` under any
+    detector. Returns per-seed numpy arrays keyed like
+    :class:`~repro.scenarios.engine.CampaignResult` fields (``total_s`` /
+    ``failed_at_s`` are NaN where inapplicable). One jitted vmapped
+    program evaluates every seed; programs are cached per
+    (scenario-shape, cost-table) pair, so repeated calls only pay the
+    fold itself.
+
+    ``record_slots=True`` additionally returns per-slot decision arrays
+    (``slot_processed`` / ``slot_handled`` / ``slot_victim`` /
+    ``slot_target`` / ``slot_blacklisted`` / ``slot_repair_sched`` /
+    ``slot_repair_at`` / ``slot_stranded``, each ``[S, n_slots]``) plus
+    the pre-sampled ``slot_verdict`` tape — everything
+    :func:`repro.obs.trace.reconstruct_traces` needs to rebuild the
+    engine's event timeline exactly. A separate cached program; the
+    default path is untouched."""
+    import jax
+    from jax.experimental import enable_x64
+
+    from repro.scenarios.spec import degrade_slowdown_s
+
+    fn, args, det, verdicts = _resolve_program(
+        spec,
+        batch,
+        strategy,
+        micro=micro,
+        profile=profile,
+        placement=placement,
+        payload_elems=payload_elems,
+        detector=detector,
+        workload=workload,
+        record_slots=record_slots,
     )
     with enable_x64():
-        fn = _compiled_replayer(static, table)
-        out = fn(
-            batch.times,
-            batch.victim,
-            batch.parent,
-            batch.predictable,
-            verdicts,
-            batch.during_ckpt,
-            batch.valid,
-            batch.repair_draws,
-            batch.part_active,
-            batch.part_comp,
-        )
+        out = fn(*args)
         out = jax.block_until_ready(out)
     out = {k: np.asarray(v) for k, v in out.items()}
 
@@ -694,4 +804,6 @@ def replay_batch(
     if slow:
         out["total_s"] = out["total_s"] + slow
     out["slowdown_s"] = np.full(batch.n_seeds, slow, np.float64)
+    if record_slots:
+        out["slot_verdict"] = verdicts
     return out

@@ -20,7 +20,7 @@ from repro.telemetry.builtin import (
     MLDetector,
     OracleDetector,
 )
-from repro.telemetry.detector import VERDICT_KINDS, Detector, Verdict
+from repro.telemetry.detector import VERDICT_KINDS, Detector, Verdict, verdict_ledger
 from repro.telemetry.frame import (
     RACK_DRIFT_STRESS,
     TRANSIENT_ALARM_RATE,
@@ -51,4 +51,5 @@ __all__ = [
     "registry",
     "synth_event_telemetry",
     "unregister",
+    "verdict_ledger",
 ]

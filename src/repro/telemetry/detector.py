@@ -31,7 +31,7 @@ from __future__ import annotations
 
 from abc import ABC, abstractmethod
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
 
@@ -115,3 +115,18 @@ class Detector(ABC):
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<{type(self).__name__} {self.name!r}>"
+
+
+def verdict_ledger(verdicts: Iterable[Verdict]) -> Dict[str, Dict[str, int]]:
+    """Per-detector claim accounting over live-path verdicts.
+
+    Groups a stream of :class:`Verdict` records (e.g. everything a
+    :class:`~repro.telemetry.builtin.CompositeDetector` emitted over a
+    trainer run) by the claiming detector and tallies verdict kinds —
+    the live-path sibling of the trace-derived
+    :func:`repro.obs.metrics.verdict_ledger`."""
+    out: Dict[str, Dict[str, int]] = {}
+    for v in verdicts:
+        row = out.setdefault(v.detector, {k: 0 for k in VERDICT_KINDS})
+        row[v.kind] = row.get(v.kind, 0) + 1
+    return out

@@ -1,12 +1,14 @@
-"""Wall-clock timing helpers for the measured tier of the evaluation."""
+"""Wall-clock timing helpers for the measured tier of the evaluation.
+
+Thin compatibility layer: the actual timing idiom lives in
+:mod:`repro.obs.profile` (one ``perf_counter`` clock, one warmup +
+``block_until_ready`` measurement discipline), and this module re-exports
+it so existing ``utils.timing`` callers keep working."""
 from __future__ import annotations
 
-import time
 from contextlib import contextmanager
 
-
-def now_s() -> float:
-    return time.perf_counter()
+from repro.obs.profile import now_s, stopwatch, timed  # noqa: F401
 
 
 class Timer:
@@ -17,11 +19,11 @@ class Timer:
 
     @contextmanager
     def section(self, name: str):
-        t0 = time.perf_counter()
         try:
-            yield
+            with stopwatch() as sw:
+                yield
         finally:
-            self.times.setdefault(name, []).append(time.perf_counter() - t0)
+            self.times.setdefault(name, []).append(sw.s)
 
     def mean(self, name: str) -> float:
         xs = self.times.get(name, [])

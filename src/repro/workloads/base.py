@@ -162,6 +162,19 @@ class Workload(ABC):
             s_p_bytes=t.payload_bytes,
         )
 
+    def measured_step_surface(self, n_shards: Tuple[int, ...] = (1, 2, 4), **shape):
+        """The *measured* wall-clock step-time surface for this workload's
+        kernel hot path, per shard count — the empirical sibling of the
+        analytic ``cost_table().step_time_s`` tuple. Routed through
+        :func:`repro.obs.profile.kernel_step_surface`: ``serve_decode``
+        times the flash-decode kernel, ``train_llm`` the flash-attention
+        kernel; workloads with no kernel hot path return ``None``. The
+        execution backend travels with the numbers (CPU runs Pallas in
+        interpret mode — never comparable to a compiled TPU figure)."""
+        from repro.obs.profile import kernel_step_surface
+
+        return kernel_step_surface(self.name, n_shards=n_shards, **shape)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<{type(self).__name__} {self.name!r}>"
 
