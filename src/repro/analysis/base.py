@@ -1,0 +1,29 @@
+"""The rule protocol: one invariant family, checked over a parsed
+:class:`~repro.analysis.project.Project`.
+
+Rules are stateless classes registered through
+:mod:`repro.analysis.registry` (the same registration-ordered idiom as
+strategies/detectors/workloads); ``check`` returns plain
+:class:`~repro.analysis.findings.Finding` rows and the runner applies
+suppressions, sorting, and severity policy centrally.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.project import Project
+
+
+class Rule:
+    """One invariant family.
+
+    Subclasses set ``description`` (one line, shown by ``--list-rules``)
+    and implement :meth:`check`. ``name`` is stamped by the registry's
+    ``@register`` decorator."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, project: Project) -> List[Finding]:
+        raise NotImplementedError

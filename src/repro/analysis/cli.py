@@ -1,0 +1,116 @@
+"""``python -m repro.analysis``: run the invariant linter from the shell.
+
+Text output by default (one line per finding, grep-friendly), ``--json``
+for the machine-readable record CI uploads as an artifact. Exit status
+is the contract: 0 when the tree is clean, 1 when any finding survives
+suppression — the CI step is blocking by construction.
+
+When a scanned directory is named ``src``, the sibling ``tests/`` and
+``benchmarks/`` trees are pulled in automatically (the parity and
+registry rules check coverage *across* them); pass ``--no-siblings`` to
+scan exactly the given paths. Fixture trees are excluded by default
+(``*/fixtures/*``) so the intentional-violation corpus never pollutes a
+real run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+from repro.analysis.project import Project
+from repro.analysis.registry import all_rules, names
+from repro.analysis.runner import run_analysis
+
+#: bumped when the JSON layout changes; the CI artifact guard pins it
+JSON_SCHEMA_VERSION = 1
+DEFAULT_EXCLUDES = ("*/fixtures/*",)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant linter: traced-purity, parity coverage, "
+        "registry completeness, units and dtype discipline.",
+    )
+    p.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files/directories to analyze (default: src)",
+    )
+    p.add_argument(
+        "--rules", default=None,
+        help="comma-separated subset of rules to run (default: all)",
+    )
+    p.add_argument("--json", action="store_true", help="emit the JSON record")
+    p.add_argument(
+        "--list-rules", action="store_true", help="list registered rules and exit"
+    )
+    p.add_argument(
+        "--no-siblings", action="store_true",
+        help="do not auto-include tests/ and benchmarks/ next to a src/ path",
+    )
+    p.add_argument(
+        "--exclude", action="append", default=None, metavar="GLOB",
+        help=f"fnmatch pattern to skip (repeatable; default: {DEFAULT_EXCLUDES})",
+    )
+    return p
+
+
+def resolve_paths(raw: Sequence[str], no_siblings: bool) -> List[Path]:
+    paths = [Path(p) for p in raw]
+    if no_siblings:
+        return paths
+    out = list(paths)
+    for p in paths:
+        if p.is_dir() and p.resolve().name == "src":
+            for sib in ("tests", "benchmarks"):
+                cand = p.resolve().parent / sib
+                if cand.is_dir() and cand not in [q.resolve() for q in out]:
+                    out.append(cand)
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.name:24s} {rule.description}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    paths = resolve_paths(args.paths, args.no_siblings)
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"error: no such path(s): {', '.join(map(str, missing))}", file=sys.stderr)
+        return 2
+    exclude = tuple(args.exclude) if args.exclude else DEFAULT_EXCLUDES
+    project = Project.load(paths, exclude=exclude)
+    findings = run_analysis(project, rules)
+
+    if args.json:
+        print(json.dumps(to_json(project, findings, rules), indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        n_files = len(project.modules)
+        if findings:
+            print(f"\n{len(findings)} finding(s) in {n_files} file(s) analyzed")
+        else:
+            print(f"clean: 0 findings in {n_files} file(s) analyzed")
+    return 1 if findings else 0
+
+
+def to_json(project: Project, findings: List[Finding], rules) -> dict:
+    return {
+        "schema_version": JSON_SCHEMA_VERSION,
+        "rules": rules or names(),
+        "n_files": len(project.modules),
+        "n_findings": len(findings),
+        "clean": not findings,
+        "findings": [f.to_dict() for f in findings],
+    }

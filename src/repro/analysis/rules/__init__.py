@@ -1,0 +1,7 @@
+"""Built-in rules: importing this package registers the five invariant
+families in declaration order (= run/report order)."""
+from repro.analysis.rules import purity  # noqa: F401
+from repro.analysis.rules import parity  # noqa: F401
+from repro.analysis.rules import registries  # noqa: F401
+from repro.analysis.rules import units  # noqa: F401
+from repro.analysis.rules import dtypes  # noqa: F401

@@ -1,0 +1,275 @@
+"""``traced-purity``: no impure call is reachable inside a trace.
+
+A function traced by ``jax.jit`` / ``jax.vmap`` / ``pl.pallas_call``
+executes once at trace time; any wall-clock read, global-RNG draw,
+stdout write, file I/O, or module-global mutation inside it is baked
+into the compiled program as a constant (or silently skipped on cached
+re-execution). For this repo that is not a style point: the replay
+kernel's trial-for-trial parity with the engine depends on the traced
+fold being a pure function of its tapes.
+
+The rule walks the *static call graph*: roots are functions wrapped by a
+tracing transform (decorator or call form, including nested wrappings
+like ``jax.jit(jax.vmap(one_seed))`` and higher-order carriers like
+``jax.lax.scan(step, ...)``) plus workload cost-surface methods
+(``surfaces`` / ``at`` — consumed inside traced folds); edges are calls
+to same-module functions. Any reachable impure call is flagged with the
+root it leaks into.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.project import ModuleSource, Project, call_name, dotted, expand
+from repro.analysis.registry import register
+
+#: dotted-prefix denylist: calls whose expanded name starts with one of
+#: these are impure inside a trace
+IMPURE_PREFIXES = (
+    "time.",
+    "random.",
+    "numpy.random.",
+    "secrets.",
+    "uuid.",
+    "os.urandom",
+    "os.getenv",
+    "os.environ",
+    "datetime.datetime.now",
+    "datetime.date.today",
+)
+#: exact impure builtins
+IMPURE_NAMES = {"print", "input", "open", "breakpoint"}
+#: numpy.random constructors that are fine at trace *build* time would
+#: still be flagged — pre-seeded generators are the sanctioned idiom and
+#: live outside traced functions in this repo
+PURE_EXCEPTIONS = {
+    "numpy.random.default_rng",  # constructing a seeded generator is pure
+    "numpy.random.Generator",
+    "numpy.random.SeedSequence",
+}
+
+#: transforms whose function-valued arguments become traced roots
+TRACING_WRAPPERS = {
+    "jax.jit",
+    "jit",
+    "jax.vmap",
+    "vmap",
+    "jax.pmap",
+    "pmap",
+    "pl.pallas_call",
+    "pallas_call",
+    "jax.experimental.pallas.pallas_call",
+}
+#: higher-order carriers: traversal descends into their function args
+#: (they run the callee inside the enclosing trace)
+HIGHER_ORDER = TRACING_WRAPPERS | {
+    "jax.lax.scan",
+    "lax.scan",
+    "jax.lax.cond",
+    "lax.cond",
+    "jax.lax.while_loop",
+    "lax.while_loop",
+    "jax.lax.fori_loop",
+    "lax.fori_loop",
+    "jax.lax.switch",
+    "lax.switch",
+    "jax.lax.map",
+    "lax.map",
+    "jax.lax.associative_scan",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.custom_vjp",
+    "jax.custom_jvp",
+    "jax.grad",
+    "jax.value_and_grad",
+    "functools.partial",
+    "partial",
+    "shard_map",
+    "jax.experimental.shard_map.shard_map",
+}
+#: method names treated as roots in workload modules: cost surfaces are
+#: consumed inside traced folds, so they must stay pure themselves
+SURFACE_ROOT_METHODS = {"surfaces", "at"}
+
+
+def _is_tracing_name(name: Optional[str]) -> bool:
+    if name is None:
+        return False
+    return name in TRACING_WRAPPERS or name.split(".")[-1] == "pallas_call"
+
+
+def _function_index(mod: ModuleSource) -> Dict[str, ast.AST]:
+    """name -> innermost FunctionDef/Lambda, at any nesting depth."""
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+def _callable_args(call: ast.Call) -> List[ast.AST]:
+    """The plausible function-valued operands of a transform call."""
+    return list(call.args) + [kw.value for kw in call.keywords]
+
+
+class _RootCollector:
+    """Find every function that ends up inside a trace in one module."""
+
+    def __init__(self, mod: ModuleSource, aliases: Dict[str, str]):
+        self.mod = mod
+        self.aliases = aliases
+        self.index = _function_index(mod)
+        self.roots: List[Tuple[str, ast.AST]] = []  # (root label, FunctionDef)
+        self._seen: Set[int] = set()
+
+    def collect(self) -> List[Tuple[str, ast.AST]]:
+        for node in ast.walk(self.mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for deco in node.decorator_list:
+                    target = deco.func if isinstance(deco, ast.Call) else deco
+                    name = expand(dotted(target), self.aliases)
+                    if _is_tracing_name(name):
+                        self._add(node.name, node)
+                    elif name in ("functools.partial", "partial") and isinstance(
+                        deco, ast.Call
+                    ):
+                        inner = deco.args[0] if deco.args else None
+                        if inner is not None and _is_tracing_name(
+                            expand(dotted(inner), self.aliases)
+                        ):
+                            self._add(node.name, node)
+            elif isinstance(node, ast.Call):
+                name = call_name(node, self.aliases)
+                if _is_tracing_name(name):
+                    for arg in _callable_args(node):
+                        self._add_expr(arg)
+        if "workloads" in self.mod.rel:
+            for fname, fn in self.index.items():
+                if fname in SURFACE_ROOT_METHODS:
+                    self._add(fname, fn)
+        return self.roots
+
+    def _add(self, label: str, fn: ast.AST):
+        if id(fn) not in self._seen:
+            self._seen.add(id(fn))
+            self.roots.append((label, fn))
+
+    def _add_expr(self, expr: ast.AST):
+        """A function-valued expression handed to a tracing transform:
+        a local function name, a lambda, or a nested wrapper call."""
+        if isinstance(expr, ast.Name) and expr.id in self.index:
+            self._add(expr.id, self.index[expr.id])
+        elif isinstance(expr, ast.Lambda):
+            self._add("<lambda>", expr)
+        elif isinstance(expr, ast.Call):
+            name = call_name(expr, self.aliases)
+            if name in HIGHER_ORDER or _is_tracing_name(name):
+                for a in _callable_args(expr):
+                    self._add_expr(a)
+
+
+@register("traced-purity")
+class TracedPurityRule(Rule):
+    description = (
+        "no wall-clock / RNG / I/O / global-mutation call reachable from a "
+        "jax.jit, jax.vmap, or pl.pallas_call root"
+    )
+
+    def check(self, project: Project) -> List[Finding]:
+        out: List[Finding] = []
+        for mod in project.by_role("src"):
+            aliases = mod.import_aliases()
+            index = _function_index(mod)
+            roots = _RootCollector(mod, aliases).collect()
+            for label, fn in roots:
+                out.extend(self._walk_root(mod, aliases, index, label, fn))
+        return out
+
+    # ------------------------------------------------------------------
+    def _walk_root(
+        self,
+        mod: ModuleSource,
+        aliases: Dict[str, str],
+        index: Dict[str, ast.AST],
+        root: str,
+        fn: ast.AST,
+        chain: Tuple[str, ...] = (),
+        visited: Optional[Set[int]] = None,
+    ) -> List[Finding]:
+        if visited is None:
+            visited = set()
+        if id(fn) in visited:
+            return []
+        visited.add(id(fn))
+        out: List[Finding] = []
+        via = " -> ".join(chain + (getattr(fn, "name", "<lambda>"),))
+
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Global):
+                    out.append(
+                        mod.finding(
+                            self.name,
+                            node,
+                            root,
+                            f"traced function mutates module globals "
+                            f"(`global {', '.join(node.names)}` via {via}) — "
+                            f"carry state through the fold instead",
+                        )
+                    )
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node, aliases)
+                if name is None:
+                    continue
+                if self._impure(name):
+                    out.append(
+                        mod.finding(
+                            self.name,
+                            node,
+                            root,
+                            f"impure call `{dotted(node.func)}` reachable inside "
+                            f"a trace (via {via}) — traced code must be a pure "
+                            f"function of its arrays",
+                        )
+                    )
+                elif name in HIGHER_ORDER:
+                    for arg in _callable_args(node):
+                        if isinstance(arg, ast.Name) and arg.id in index:
+                            out.extend(
+                                self._walk_root(
+                                    mod, aliases, index, root,
+                                    index[arg.id],
+                                    chain + (getattr(fn, "name", "<lambda>"),),
+                                    visited,
+                                )
+                            )
+                        elif isinstance(arg, ast.Lambda):
+                            out.extend(
+                                self._walk_root(
+                                    mod, aliases, index, root, arg,
+                                    chain + (getattr(fn, "name", "<lambda>"),),
+                                    visited,
+                                )
+                            )
+                elif "." not in name and name in index and name not in IMPURE_NAMES:
+                    out.extend(
+                        self._walk_root(
+                            mod, aliases, index, root, index[name],
+                            chain + (getattr(fn, "name", "<lambda>"),),
+                            visited,
+                        )
+                    )
+        return out
+
+    @staticmethod
+    def _impure(name: str) -> bool:
+        if name in PURE_EXCEPTIONS:
+            return False
+        if name in IMPURE_NAMES:
+            return True
+        return any(name.startswith(p) for p in IMPURE_PREFIXES)

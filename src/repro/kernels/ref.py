@@ -21,8 +21,8 @@ def attention_ref(q, k, v, *, causal=True, window=0):
     vv = jnp.repeat(v, g, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
     s = s / np.sqrt(hd)
-    qpos = jnp.arange(S)[:, None]
-    kpos = jnp.arange(S)[None, :]
+    qpos = jnp.arange(S, dtype=jnp.int32)[:, None]
+    kpos = jnp.arange(S, dtype=jnp.int32)[None, :]
     mask = jnp.ones((S, S), bool)
     if causal:
         mask = mask & (kpos <= qpos)
@@ -51,7 +51,7 @@ def wkv6_ref(r, k, v, wlog, u, state):
         S_new = S_state * wt[..., None] + kt[..., None] * vt[..., None, :]
         return S_new, y
 
-    state_f, ys = jax.lax.scan(step, state.astype(jnp.float32), jnp.arange(S))
+    state_f, ys = jax.lax.scan(step, state.astype(jnp.float32), jnp.arange(S, dtype=jnp.int32))
     y = jnp.moveaxis(ys, 0, 2)  # (B,H,S,N)
     return y.astype(r.dtype), state_f
 
@@ -65,5 +65,5 @@ def rglru_ref(log_a, m, h0):
         h = a[:, t] * h + mf[:, t]
         return h, h
 
-    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(log_a.shape[1]))
+    hT, hs = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(log_a.shape[1], dtype=jnp.int32))
     return jnp.moveaxis(hs, 0, 1), hT

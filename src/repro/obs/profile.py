@@ -222,9 +222,10 @@ def _decode_case(batch: int, seq_len: int, heads: int, head_dim: int, impl: str)
     from repro.kernels.decode_attention import flash_decode, flash_decode_ref
 
     rng = np.random.default_rng(0)
-    q = jnp.asarray(rng.standard_normal((batch, heads, head_dim)), jnp.float32)
-    k = jnp.asarray(rng.standard_normal((batch, heads, seq_len, head_dim)), jnp.float32)
-    v = jnp.asarray(rng.standard_normal((batch, heads, seq_len, head_dim)), jnp.float32)
+    # Pallas decode kernels are natively f32 — not replay-kernel state
+    q = jnp.asarray(rng.standard_normal((batch, heads, head_dim)), jnp.float32)  # repro: ignore[dtype-x64]
+    k = jnp.asarray(rng.standard_normal((batch, heads, seq_len, head_dim)), jnp.float32)  # repro: ignore[dtype-x64]
+    v = jnp.asarray(rng.standard_normal((batch, heads, seq_len, head_dim)), jnp.float32)  # repro: ignore[dtype-x64]
     kpos = jnp.tile(jnp.arange(seq_len, dtype=jnp.int32), (batch, 1))
     pos = seq_len - 1  # scalar decode position (the cache is full)
     if impl == "pallas":
@@ -243,9 +244,10 @@ def _attention_case(batch: int, seq_len: int, heads: int, head_dim: int, impl: s
 
     rng = np.random.default_rng(0)
     shape = (batch, heads, seq_len, head_dim)
-    q = jnp.asarray(rng.standard_normal(shape), jnp.float32)
-    k = jnp.asarray(rng.standard_normal(shape), jnp.float32)
-    v = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    # Pallas attention kernels are natively f32 — not replay-kernel state
+    q = jnp.asarray(rng.standard_normal(shape), jnp.float32)  # repro: ignore[dtype-x64]
+    k = jnp.asarray(rng.standard_normal(shape), jnp.float32)  # repro: ignore[dtype-x64]
+    v = jnp.asarray(rng.standard_normal(shape), jnp.float32)  # repro: ignore[dtype-x64]
     return lambda: attention(q, k, v, causal=True, impl=impl)
 
 

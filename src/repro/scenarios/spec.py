@@ -131,9 +131,9 @@ class ScenarioSpec:
         racks = d.get("racks")
         if racks is not None:
             d["racks"] = {int(k): int(v) for k, v in racks.items()}
-        repair = d.get("repair_s")
-        if isinstance(repair, (tuple, list)):  # JSON round-trips tuples as lists
-            d["repair_s"] = (str(repair[0]), float(repair[1]), float(repair[2]))
+        repair_s = d.get("repair_s")
+        if isinstance(repair_s, (tuple, list)):  # JSON round-trips tuples as lists
+            d["repair_s"] = (str(repair_s[0]), float(repair_s[1]), float(repair_s[2]))
         return ScenarioSpec(**d)
 
     def sample_repair(self, rng: np.random.Generator) -> Optional[float]:
@@ -185,11 +185,11 @@ class ScenarioSpec:
                 comps = self.effective_racks() or {}
             comps = {int(k): int(v) for k, v in comps.items()}
             changes.append((t0, comps))
-            heal = p.get("heal_t")
-            if heal is None and p.get("duration_s") is not None:
-                heal = t0 + float(p["duration_s"])
-            if heal is not None:
-                changes.append((float(heal), None))
+            heal_s = p.get("heal_t")
+            if heal_s is None and p.get("duration_s") is not None:
+                heal_s = t0 + float(p["duration_s"])
+            if heal_s is not None:
+                changes.append((float(heal_s), None))
         return sorted(changes, key=lambda c: c[0])
 
     # ---------------------------------------------------- degrade timeline
@@ -284,10 +284,10 @@ class ScenarioSpec:
                 rack_id = int(rng.choice(sorted(set(racks.values()))))
             members = [n for n, r in racks.items() if r == rack_id and n < self.n_nodes]
             t0 = float(p.get("t", self.period_s / 2))
-            spread = float(p.get("spread_s", 60.0))
+            spread_s = float(p.get("spread_s", 60.0))
             return [
                 FailureEvent(
-                    t=t0 + float(rng.uniform(0.0, spread)),
+                    t=t0 + float(rng.uniform(0.0, spread_s)),
                     node=int(n),
                     predictable=bool(rng.random() < self.predictable_fraction),
                     cause="rack",
@@ -316,10 +316,10 @@ class ScenarioSpec:
 
         if proc.kind == "flaky":
             node = int(p.get("node", rng.integers(0, self.n_nodes)))
-            every = float(p.get("every_s", self.period_s / 2))
-            if every <= 0:
-                raise ValueError(f"flaky every_s must be > 0, got {every}")
-            t = float(p.get("first_t", every))
+            every_s = float(p.get("every_s", self.period_s / 2))
+            if every_s <= 0:
+                raise ValueError(f"flaky every_s must be > 0, got {every_s}")
+            t = float(p.get("first_t", every_s))
             out = []
             while t < self.horizon_s:
                 out.append(
@@ -330,7 +330,7 @@ class ScenarioSpec:
                         cause="flaky",
                     )
                 )
-                t += every
+                t += every_s
             return out
 
         if proc.kind == "ckpt_window":

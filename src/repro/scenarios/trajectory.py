@@ -113,7 +113,7 @@ def compile_tape(spec: ScenarioSpec, seed: Optional[int] = None) -> TrajectoryTa
     placement policy, so one tape replays under any cost table."""
     base_seed = spec.seed if seed is None else seed
     evs = spec.events(base_seed)
-    horizon = spec.horizon_s
+    horizon_s = spec.horizon_s
     H = spec.n_nodes + spec.n_spares
 
     n0 = len(evs)
@@ -129,11 +129,11 @@ def compile_tape(spec: ScenarioSpec, seed: Optional[int] = None) -> TrajectoryTa
     for i, ev in enumerate(evs):
         if not ev.cascade or int(ev.cascade.get("depth", 0)) <= 0:
             continue
-        delay = float(ev.cascade.get("delay_s", 120.0))
+        delay_s = float(ev.cascade.get("delay_s", 120.0))
         par, t = i, float(ev.t)
         for _ in range(int(ev.cascade["depth"])):
-            t = t + delay
-            if t >= horizon:
+            t = t + delay_s
+            if t >= horizon_s:
                 break  # never processed, so it spawns no grandchildren
             j = len(times)
             times.append(t)
@@ -322,11 +322,11 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
 
     H = static.n_hosts
     n_slots = static.n_slots
-    period = static.period_s
-    horizon = static.horizon_s
+    period_s = static.period_s
+    horizon_s = static.horizon_s
     max_strikes = static.max_strikes
     mode = table.mode
-    idxH = jnp.arange(H)
+    idxH = jnp.arange(H, dtype=jnp.int32)
 
     # initial dependency degrees of the engine's star topology (genome
     # search: workers feed one combiner, spares carry no edges)
@@ -338,7 +338,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
     def one_seed(times, victim0, parent, pred, verd, during, valid, draws, p_act, p_comp):
         init = dict(
             down=jnp.zeros(H, bool),
-            repair_at=jnp.full(H, jnp.inf),
+            repair_at=jnp.full(H, jnp.inf, dtype=jnp.float64),
             black=jnp.zeros(H, bool),
             strikes=jnp.zeros(H, jnp.int32),
             occupied=idxH < static.n_workers,
@@ -346,22 +346,24 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             # in the pool); argmin over eligible entries reproduces the
             # engine's list order through removals and repair re-appends
             spare_seq=jnp.where(
-                idxH >= static.n_workers, (idxH - static.n_workers) * 1.0, jnp.inf
+                idxH >= static.n_workers,
+                (idxH - static.n_workers).astype(jnp.float64),
+                jnp.inf,
             ),
-            next_seq=jnp.asarray(float(static.n_spares)),
-            deg=jnp.asarray(deg0),
-            attempt=jnp.zeros(H),
+            next_seq=jnp.asarray(float(static.n_spares), dtype=jnp.float64),
+            deg=jnp.asarray(deg0, dtype=jnp.int32),
+            attempt=jnp.zeros(H, dtype=jnp.float64),
             rcount=jnp.asarray(0, jnp.int32),
             n_events=jnp.asarray(0, jnp.int32),
             n_handled=jnp.asarray(0, jnp.int32),
             n_migrations=jnp.asarray(0, jnp.int32),
             n_blacklisted=jnp.asarray(0, jnp.int32),
             n_reprovisioned=jnp.asarray(0, jnp.int32),
-            lost=jnp.asarray(0.0),
-            reinstate=jnp.asarray(0.0),
-            overhead=jnp.asarray(0.0),
-            alive=jnp.asarray(True),
-            failed_at=jnp.asarray(0.0),
+            lost=jnp.asarray(0.0, dtype=jnp.float64),
+            reinstate=jnp.asarray(0.0, dtype=jnp.float64),
+            overhead=jnp.asarray(0.0, dtype=jnp.float64),
+            alive=jnp.asarray(True, dtype=jnp.bool_),
+            failed_at=jnp.asarray(0.0, dtype=jnp.float64),
             fired=jnp.zeros(n_slots, bool),
             tgt_rec=jnp.full(n_slots, -1, jnp.int32),
         )
@@ -380,8 +382,10 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             )
             rank = jnp.sum(before & due[None, :], axis=1)
             nrep = jnp.sum(due)
-            spare_seq = jnp.where(due, c["next_seq"] + rank, c["spare_seq"])
-            next_seq = c["next_seq"] + nrep
+            spare_seq = jnp.where(
+                due, c["next_seq"] + rank.astype(jnp.float64), c["spare_seq"]
+            )
+            next_seq = c["next_seq"] + nrep.astype(jnp.float64)
             down = c["down"] & ~due
             repair_at = jnp.where(due, jnp.inf, c["repair_at"])
             n_reprovisioned = c["n_reprovisioned"] + nrep.astype(jnp.int32)
@@ -412,7 +416,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
                 allowed = jnp.where(pa, comp == comp[v], True)
                 okf = okf & allowed
             pool = jnp.isfinite(spare_seq) & okf
-            i1 = jnp.argmin(jnp.where(pool, spare_seq, jnp.inf))
+            i1 = jnp.argmin(jnp.where(pool, spare_seq, jnp.inf)).astype(jnp.int32)
             nb1 = (v - 1) % H
             nb2 = (v + 1) % H
             m3 = okf & (idxH != v)
@@ -422,7 +426,11 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
                 jnp.where(
                     okf[nb1],
                     nb1,
-                    jnp.where(okf[nb2], nb2, jnp.where(jnp.any(m3), jnp.argmax(m3), -1)),
+                    jnp.where(
+                        okf[nb2],
+                        nb2,
+                        jnp.where(jnp.any(m3), jnp.argmax(m3).astype(jnp.int32), -1),
+                    ),
                 ),
             )
             if static.partition_aware:
@@ -436,27 +444,27 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             tgt = jnp.clip(target, 0, H - 1)
 
             # -- per-event billing from the StrategyCostTable
-            wstart = jnp.floor(t / period) * period
+            wstart = jnp.floor(t / period_s) * period_s
             if mode == "window":
                 if table.ckpt_invalidation:
                     # mid-checkpoint failure: restore from one window back
                     # plus the wasted partial write
-                    lost_ev = (t - wstart) + jnp.where(dur, period, 0.0)
+                    lost_ev = (t - wstart) + jnp.where(dur, period_s, 0.0)
                     ovh_ev = table.overhead_s * jnp.where(dur, 1.5, 1.0)
                 else:
                     lost_ev = t - wstart
-                    ovh_ev = jnp.asarray(table.overhead_s)
-                rst_ev = jnp.asarray(table.reinstate_s)
+                    ovh_ev = jnp.asarray(table.overhead_s, dtype=jnp.float64)
+                rst_ev = jnp.asarray(table.reinstate_s, dtype=jnp.float64)
             elif mode == "proactive":
                 if table.mechanism == "agent":
-                    is_agent = jnp.asarray(True)
+                    is_agent = jnp.asarray(True, dtype=jnp.bool_)
                 elif table.mechanism == "core":
-                    is_agent = jnp.asarray(False)
+                    is_agent = jnp.asarray(False, dtype=jnp.bool_)
                 else:  # "rules": Z-negotiation per event (Rules 1-3)
                     if static.rules_agent_small:
                         is_agent = c["deg"][v] > Z_THRESHOLD
                     else:
-                        is_agent = jnp.asarray(False)
+                        is_agent = jnp.asarray(False, dtype=jnp.bool_)
                 rst_m = jnp.where(is_agent, table.agent_reinstate_s, table.core_reinstate_s)
                 ovh_ev = jnp.where(is_agent, table.agent_overhead_s, table.core_overhead_s)
                 # a failure is only *saved* when the detector claimed it AND
@@ -466,8 +474,8 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
                 rst_ev = rst_m + jnp.where(vrd, table.predict_s, 0.0)
             else:  # "cold": lose everything since the sub-job's last start
                 lost_ev = t - c["attempt"][v]
-                rst_ev = jnp.asarray(table.reinstate_s)
-                ovh_ev = jnp.asarray(0.0)
+                rst_ev = jnp.asarray(table.reinstate_s, dtype=jnp.float64)
+                ovh_ev = jnp.asarray(0.0, dtype=jnp.float64)
 
             lost = c["lost"] + jnp.where(handled, lost_ev, 0.0)
             reinstate = c["reinstate"] + jnp.where(handled, rst_ev, 0.0)
@@ -550,7 +558,7 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
             )
 
         xs = (
-            jnp.arange(n_slots),
+            jnp.arange(n_slots, dtype=jnp.int64),
             times,
             victim0,
             parent,
@@ -566,15 +574,15 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
         # repairs still pending at the end of the stream complete (and are
         # counted) if they land inside the horizon — unless the campaign
         # was lost, in which case the engine abandons the queue
-        tail_repairs = jnp.sum(c["repair_at"] < horizon).astype(jnp.int32)
+        tail_repairs = jnp.sum(c["repair_at"] < horizon_s).astype(jnp.int32)
         n_reprovisioned = c["n_reprovisioned"] + jnp.where(c["alive"], tail_repairs, 0)
 
         # background probing accrues only while the campaign is running
-        span = jnp.where(c["alive"], horizon, c["failed_at"])
-        probe = table.probe_s_per_hour * span / 3600.0
+        span_s = jnp.where(c["alive"], horizon_s, c["failed_at"])
+        probe = table.probe_s_per_hour * span_s / 3600.0
         total = jnp.where(
             c["alive"],
-            horizon + c["lost"] + c["reinstate"] + c["overhead"] + probe,
+            horizon_s + c["lost"] + c["reinstate"] + c["overhead"] + probe,
             jnp.nan,
         )
         out = dict(
@@ -601,7 +609,8 @@ def _compiled_replayer(static: _ReplayStatic, table: StrategyCostTable):
 
 def _payload_bytes(payload_elems: int) -> int:
     """S_d of the engine's per-host sub-job payload (Rules 2-3 input)."""
-    return tree_bytes({"partial": np.zeros(payload_elems, np.float32), "cursor": 0})
+    # engine fidelity: the real sub-job payload ships f32 partials
+    return tree_bytes({"partial": np.zeros(payload_elems, np.float32), "cursor": 0})  # repro: ignore[dtype-x64]
 
 
 def _default_micro(workload, profile: str, n_nodes: int):

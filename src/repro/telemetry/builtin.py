@@ -158,7 +158,7 @@ class EWMAStragglerDetector(Detector):
             self._det = StragglerDetector(n_hosts=n_hosts, **cfg)
 
     def observe(self, t: float, frame: TelemetryFrame) -> List[Verdict]:
-        lat = frame.step_latency
+        lat = frame.step_latency_s
         if lat is None:
             return []
         lat = np.asarray(lat, dtype=float)

@@ -66,7 +66,7 @@ class TelemetryFrame:
 
     t: float
     signals: Dict[int, HealthSignal] = field(default_factory=dict)
-    step_latency: Optional[np.ndarray] = None  # per-host pacing signal
+    step_latency_s: Optional[np.ndarray] = None  # per-host pacing signal, seconds
     oracle: Optional[Dict] = None  # ground truth: OracleDetector only
 
     def feature_matrix(self) -> np.ndarray:
@@ -80,7 +80,7 @@ def frame_from_heartbeats(
     hb: HeartbeatService,
     t: float,
     features: Optional[Dict[int, np.ndarray]] = None,
-    step_latency: Optional[np.ndarray] = None,
+    step_latency_s: Optional[np.ndarray] = None,
     oracle: Optional[Dict] = None,
 ) -> TelemetryFrame:
     """Build a frame from a live :class:`HeartbeatService`.
@@ -95,9 +95,9 @@ def frame_from_heartbeats(
         features = {i: log[-1] for i, log in hb.logs.items() if log and hb.alive(i)}
     for i, f in features.items():
         signals[i] = HealthSignal(node=i, features=f, rack_stress=hb.rack_stress(i))
-    if step_latency is None:
-        step_latency = np.asarray(hb.latency_ewma, dtype=float)
-    return TelemetryFrame(t=t, signals=signals, step_latency=step_latency, oracle=oracle)
+    if step_latency_s is None:
+        step_latency_s = np.asarray(hb.latency_ewma, dtype=float)
+    return TelemetryFrame(t=t, signals=signals, step_latency_s=step_latency_s, oracle=oracle)
 
 
 def synth_event_telemetry(

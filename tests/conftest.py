@@ -3,3 +3,13 @@ import sys
 
 # allow `pytest tests/` without PYTHONPATH=src
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Strict lane: REPRO_STRICT_PROMOTION=1 runs the whole suite with jax's
+# implicit rank promotion and implicit dtype promotion turned into hard
+# errors — any silent f64/f32 mix or broadcast the dtype-x64 lint can't
+# see statically fails loudly here. CI runs tier-1 once in each mode.
+if os.environ.get("REPRO_STRICT_PROMOTION") == "1":
+    import jax
+
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+    jax.config.update("jax_numpy_dtype_promotion", "strict")

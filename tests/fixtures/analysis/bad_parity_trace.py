@@ -1,0 +1,19 @@
+"""Fixture: a _KIND_ORDER trace kind removed from the kernel-side
+handler — the engine emits ``ghost`` but ``reconstruct_traces`` never
+produces it, so event-level parity is unprovable for it."""
+
+_KIND_ORDER = {"failure": 0, "ghost": 1}
+
+
+class Recorder:
+    def emit(self, t, kind):
+        pass
+
+
+def run_engine(rec, t):
+    rec.emit(t, "failure")
+    rec.emit(t, "ghost")
+
+
+def reconstruct_traces(rec, t):
+    rec.emit(t, "failure")

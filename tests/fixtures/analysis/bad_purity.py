@@ -1,0 +1,9 @@
+"""Fixture: a wall-clock read reachable inside a jax.jit trace."""
+import time
+
+import jax
+
+
+@jax.jit
+def leaky_step(x):
+    return x * time.time()  # traced-purity violation

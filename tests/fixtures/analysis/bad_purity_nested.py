@@ -1,0 +1,18 @@
+"""Fixture: impurity two hops down the call graph, through a
+``jax.jit(jax.vmap(...))`` call-form root and a ``lax.scan`` carrier."""
+import random
+
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, x):
+    return carry + random.random(), x  # traced-purity violation
+
+
+def one_seed(xs):
+    total, _ = jax.lax.scan(step, 0.0, xs)
+    return total
+
+
+replayer = jax.jit(jax.vmap(one_seed))

@@ -1,0 +1,14 @@
+"""Fixture: time quantities that drop their unit — an unsuffixed
+dataclass field and a local that demonstrably holds seconds."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Window:
+    start_s: float
+    duration: float  # units-s violation: field
+
+
+def pick_delay(p):
+    delay = float(p.get("delay_s", 120.0))  # units-s violation: local
+    return delay

@@ -100,6 +100,32 @@ def test_all_process_kinds_clip_to_horizon():
     assert all(e.t < 3600.0 for e in spec.events())
 
 
+def test_ckpt_window_process_strikes_mid_checkpoint():
+    """ckpt_window failures land offset_s into each checkpoint window,
+    flagged during_checkpoint (the invalidation path) and unpredictable
+    (mid-write failures give no telemetry lead)."""
+    spec = ScenarioSpec(
+        name="storm",
+        n_nodes=4,
+        horizon_s=4 * 3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("ckpt_window", {"offset_s": 5.0})],
+    )
+    evs = spec.events(0)
+    assert [e.t for e in evs] == [3605.0, 7205.0, 10805.0]  # k*period + 5, clipped
+    assert all(e.cause == "ckpt_window" for e in evs)
+    assert all(e.during_checkpoint and not e.predictable for e in evs)
+
+    only_second = ScenarioSpec(
+        name="storm_w2",
+        n_nodes=4,
+        horizon_s=4 * 3600.0,
+        period_s=3600.0,
+        processes=[FailureProcessSpec("ckpt_window", {"offset_s": 5.0, "windows": [2]})],
+    )
+    assert [e.t for e in only_second.events(0)] == [7205.0]
+
+
 def test_rack_process_fails_whole_rack_within_spread():
     spec = registry.get("rack_outage")
     evs = spec.events()

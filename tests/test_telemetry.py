@@ -310,7 +310,7 @@ def test_ewma_straggler_flags_live_drift():
     for _ in range(20):
         lat = rng.normal(1.0, 0.02, size=8)
         lat[5] /= 0.4  # host 5 is slow
-        frame = TelemetryFrame(t=0.0, step_latency=lat)
+        frame = TelemetryFrame(t=0.0, step_latency_s=lat)
         flagged = det.observe(0.0, frame)
     assert [v.node for v in flagged] == [5]
     assert all(v.kind == "straggler" for v in flagged)
@@ -321,7 +321,7 @@ def test_composite_detector_concatenates_and_flags():
     assert comp.flags_stragglers
     frame = TelemetryFrame(
         t=0.0,
-        step_latency=np.ones(4),
+        step_latency_s=np.ones(4),
         oracle={"node": 2, "imminent": True, "lead_s": 38.0},
     )
     vs = comp.observe(0.0, frame)
