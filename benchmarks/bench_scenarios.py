@@ -14,9 +14,13 @@ Emits a JSON report (BENCH_OUT/scenarios.json) with these sections:
                     family (cascade, rack, flaky, burst, partition, ...)
                     through the batched replay kernel: per-family p5/p50/
                     p95 tails + survival, a trial-for-trial differential
-                    check against the Python engine, and the >= 10x
-                    speedup certification over the per-seed engine loop
-                    (on the mc_stress family);
+                    check against the Python engine, the >= 10x speedup
+                    certification over the per-seed engine loop (on the
+                    mc_stress family), per-family steady-state seeds/sec,
+                    and the fleet-scale certification: >= 100x over the
+                    engine loop on the 1024-node fleet_stress family
+                    through the tiled/sharded kernel, engine-exact on
+                    every differentially-checked seed;
   detectors         per-detector x per-family detection quality over the
                     compiled verdict tapes: coverage (bounded by the 29 %
                     of failures that emit a signature at all), precision
@@ -84,6 +88,14 @@ from repro.workloads import registry as workload_registry
 PAPER_SCENARIOS = ("table1_periodic", "table1_random", "table2_random")
 MIN_SPEEDUP = 10.0
 SPEEDUP_FAMILY = "mc_stress"  # big enough that the ratio is unambiguous
+# the fleet-scale certification: the tiled/sharded kernel vs the per-seed
+# engine loop on the 1024-node family (the engine pays seconds per trial
+# there, so its loop time is extrapolated from a few real runs)
+FLEET_FAMILY = "fleet_stress"
+MIN_FLEET_SPEEDUP = 100.0
+# per-family seed caps for the trajectory tails loop: fleet-size tapes pay
+# ~10 ms/seed through the batched path — plenty of tail resolution at 256
+FAMILY_SEED_CAP = {FLEET_FAMILY: 256}
 TRAJECTORY_STRATEGIES = ("central_single", "core")
 # rack-correlated families: the ml detector's asserted operating band
 DETECTOR_ASSERT_FAMILIES = ("rack_outage", "mc_stress", "multi_window_storm")
@@ -99,7 +111,7 @@ MULTI_AGENT = ("agent", "core", "hybrid")
 ORDERING_ASSERT_WORKLOADS = ("analytic", "genome_search")
 # observability section: small family so the exported trace stays readable
 OBS_FAMILY = "flaky_node"
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2  # v2: n_devices, per-family seeds_per_s, fleet cert
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
@@ -212,7 +224,8 @@ def run_trajectories(micro, n_seeds: int, assert_speedup: bool) -> dict:
     stress_mc = None
     for name in registry.names():
         spec = registry.get(name)
-        batch = compile_batch(spec, n_seeds)  # shared across strategies
+        n_fam = min(n_seeds, FAMILY_SEED_CAP.get(name, n_seeds))
+        batch = compile_batch(spec, n_fam)  # shared across strategies
         per = {}
         wl_micro = micro if spec.workload == "analytic" else None
         for strat in TRAJECTORY_STRATEGIES:
@@ -228,6 +241,13 @@ def run_trajectories(micro, n_seeds: int, assert_speedup: bool) -> dict:
                 "mean_migrations": round(mc["counters"]["n_migrations"], 2),
                 "mean_blacklisted": round(mc["counters"]["n_blacklisted"], 2),
             }
+        # steady-state per-family throughput (the program is compiled by
+        # the strategy loop above; this re-runs the full batched path —
+        # replay + metric-frame aggregation — once more and normalises)
+        with stopwatch() as sw_fam:
+            mc_trajectories(spec, "central_single", micro=wl_micro, batch=batch)
+        per["n_seeds"] = n_fam
+        per["seeds_per_s"] = round(n_fam / max(sw_fam.s, 1e-9), 1)
         per["workload"] = spec.workload  # which cost model billed the trials
         out["families"][name] = per
 
@@ -272,6 +292,52 @@ def run_trajectories(micro, n_seeds: int, assert_speedup: bool) -> dict:
             f"per-seed engine loop (need >= {MIN_SPEEDUP}x)"
         )
     out["min_speedup_required"] = MIN_SPEEDUP
+
+    # fleet-scale certification: the tiled/sharded kernel vs the per-seed
+    # engine loop on the 1024-node family. The engine pays seconds per
+    # trial here, so its loop time is extrapolated from a few real runs —
+    # each of which doubles as a trial-for-trial differential check. The
+    # timed batched call again includes tape compilation.
+    fspec = registry.get(FLEET_FAMILY)
+    n_fleet = min(512, n_seeds)
+    mc_trajectories(fspec, "central_single", n_seeds=n_fleet, micro=micro)  # warm
+    with stopwatch() as sw_fleet:
+        fmc = mc_trajectories(fspec, "central_single", n_seeds=n_fleet, micro=micro)
+    t_fleet = sw_fleet.s
+    n_fleet_base = 3
+    fleet_exact = True
+    with stopwatch() as sw_floop:
+        engine_res = [
+            CampaignEngine(fspec, "central_single", micro=micro, seed=s).run()
+            for s in range(n_fleet_base)
+        ]
+    for s, r in enumerate(engine_res):
+        got = float(fmc["trials"]["total_s"][s])
+        want = r.total_s if r.survived else float("nan")
+        fleet_exact &= (got != got and want != want) or abs(got - want) < 1e-6 * abs(want)
+    t_floop = sw_floop.s / n_fleet_base * n_fleet
+    fleet_speedup = t_floop / max(t_fleet, 1e-9)
+    out["fleet"] = {
+        "family": FLEET_FAMILY,
+        "n_nodes": fspec.n_nodes,
+        "n_seeds": n_fleet,
+        "batched_s": round(t_fleet, 4),
+        "batched_ms_per_seed": round(1000.0 * t_fleet / n_fleet, 3),
+        "engine_loop_s": round(t_floop, 4),
+        "engine_s_per_seed": round(sw_floop.s / n_fleet_base, 4),
+        "engine_loop_seeds_measured": n_fleet_base,
+        "speedup": round(fleet_speedup, 1),
+        "engine_match": bool(fleet_exact),
+        "min_required": MIN_FLEET_SPEEDUP,
+    }
+    if assert_speedup:
+        assert fleet_exact, (
+            f"trajectory kernel diverged from the Python engine on {FLEET_FAMILY}"
+        )
+        assert fleet_speedup >= MIN_FLEET_SPEEDUP, (
+            f"fleet-scale batched MC only {fleet_speedup:.1f}x faster than the "
+            f"per-seed engine loop on {FLEET_FAMILY} (need >= {MIN_FLEET_SPEEDUP}x)"
+        )
     out["asserted"] = assert_speedup
     return out
 
@@ -425,10 +491,49 @@ def run_profiling(micro, n_seeds: int, dry_run: bool) -> dict:
     siblings of the analytic surfaces in workloads/builtin.py. The
     backend travels with every number: on CPU the Pallas path runs in
     interpret mode and is never comparable to a compiled TPU figure."""
+    from repro.scenarios.trajectory import default_seed_devices, replay_cache_stats
+
     spec = registry.get(SPEEDUP_FAMILY)
     out = {"replay": {}, "kernels": {}}
     for strat in TRAJECTORY_STRATEGIES:
         out["replay"][strat] = profile_replay(spec, strat, n_seeds=n_seeds, micro=micro)
+
+    # fleet-scale profile: the tiled/sharded execution shape on the
+    # 1024-node family, sharding the seed axis over every local device,
+    # plus the donation A/B — record-mode outputs are [seeds, slots] so
+    # donated tape buffers alias into them and peak memory drops
+    fspec = registry.get(FLEET_FAMILY)
+    n_fleet = 32 if dry_run else 256
+    out["replay"][FLEET_FAMILY] = profile_replay(
+        fspec,
+        "central_single",
+        n_seeds=n_fleet,
+        micro=micro,
+        n_devices=default_seed_devices(n_fleet),
+    )
+    mem_ab = {}
+    for label, donate in (("donate", True), ("no_donate", False)):
+        p = profile_replay(
+            fspec,
+            "central_single",
+            n_seeds=n_fleet,
+            micro=micro,
+            donate=donate,
+            record_slots=True,
+            n_exec=1,
+            n_devices=1,  # isolate donation from shard_map's buffer layout
+        )
+        mem_ab[label] = p["memory"]
+    if mem_ab["donate"] and mem_ab["no_donate"]:
+        mem_ab["peak_drop_bytes"] = (
+            mem_ab["no_donate"]["peak_bytes"] - mem_ab["donate"]["peak_bytes"]
+        )
+    out["fleet_memory"] = mem_ab
+    # how many distinct XLA programs the whole bench compiled so far vs
+    # how many replays were served from cache (cost-table coefficients
+    # travel as traced values, so strategies sharing a structural shape
+    # share one compile)
+    out["program_cache"] = replay_cache_stats()
 
     # interpret-mode Pallas is slow: tiny shapes in dry-run, modest in full
     shards = (1, 2) if dry_run else (1, 2, 4)
@@ -509,16 +614,22 @@ def write_bench_record(report: dict, dry_run: bool) -> str:
         }
         for wl, rec in report["workloads"]["workloads"].items()
     }
+    import jax
+
+    fleet = report["trajectories"]["fleet"]
     record = {
         "schema_version": BENCH_SCHEMA_VERSION,
         "generated_by": "benchmarks/bench_scenarios.py",
         "dry_run": bool(dry_run),
         "backend": prof["central_single"]["backend"],
+        "n_devices": int(jax.local_device_count()),
         "replay_profile": {
             strat: {
                 k: p[k]
                 for k in (
                     "n_seeds",
+                    "n_devices",
+                    "tile_slots",
                     "tape_compile_s",
                     "lower_s",
                     "compile_s",
@@ -530,14 +641,33 @@ def write_bench_record(report: dict, dry_run: bool) -> str:
             for strat, p in prof.items()
         },
         "seeds_per_s": prof["central_single"]["seeds_per_s"],
+        "per_family_seeds_per_s": {
+            fam: per["seeds_per_s"]
+            for fam, per in report["trajectories"]["families"].items()
+        },
         "speedup": {
             "montecarlo": {
                 s: mc["speedup"] for s, mc in report["montecarlo"]["strategies"].items()
             },
             "trajectory": sp["speedup"],
             "min_required": MIN_SPEEDUP,
+            "fleet": {
+                k: fleet[k]
+                for k in (
+                    "family",
+                    "n_nodes",
+                    "n_seeds",
+                    "batched_ms_per_seed",
+                    "engine_s_per_seed",
+                    "speedup",
+                    "engine_match",
+                    "min_required",
+                )
+            },
             "asserted": report["trajectories"]["asserted"],
         },
+        "program_cache": report["profiling"]["program_cache"],
+        "fleet_memory": report["profiling"]["fleet_memory"],
         "trace_parity": report["observability"]["trace_parity"],
         "workload_overhead_pct": overhead,
     }
@@ -619,6 +749,13 @@ def main(argv=None):
         f"(engine loop {sp['engine_loop_s']}s vs batched {sp['batched_s']}s), "
         f"engine_match={traj['engine_match']['exact']}"
     )
+    fl = traj["fleet"]
+    print(
+        f"  FLEET speedup on {fl['family']} ({fl['n_nodes']} nodes): "
+        f"{fl['speedup']}x (engine {fl['engine_s_per_seed']}s/seed vs batched "
+        f"{fl['batched_ms_per_seed']}ms/seed, need >= {fl['min_required']}x), "
+        f"engine_match={fl['engine_match']}"
+    )
     for det_name, per in report["detectors"]["detectors"].items():
         if det_name == "ewma_straggler":
             continue  # flags stragglers, claims no failures
@@ -647,11 +784,23 @@ def main(argv=None):
         print("  WL ordering (checkpointing >> multi-agent) holds on every workload")
     for strat, p in report["profiling"]["replay"].items():
         print(
-            f"  PROF[{strat:14s}] backend={p['backend']} "
+            f"  PROF[{strat:14s}] backend={p['backend']} devices={p['n_devices']} "
             f"compile={p['lower_s'] + p['compile_s']:.3f}s "
             f"execute={p['execute_s']:.5f}s seeds/s={p['seeds_per_s']:.0f} "
             f"(compile/execute={p['compile_over_execute']}x)"
         )
+    mem = report["profiling"]["fleet_memory"]
+    if mem.get("peak_drop_bytes") is not None:
+        print(
+            f"  PROF[fleet memory] donate peak={mem['donate']['peak_bytes']}B "
+            f"vs no-donate {mem['no_donate']['peak_bytes']}B "
+            f"(drop={mem['peak_drop_bytes']}B, aliased={mem['donate']['alias_bytes']}B)"
+        )
+    cache = report["profiling"]["program_cache"]
+    print(
+        f"  PROF[program cache] programs={cache['programs']} "
+        f"hits={cache['hits']} misses={cache['misses']}"
+    )
     for wl_name, surf in report["profiling"]["kernels"].items():
         pairs = " ".join(
             f"n={n}:{m}s" for n, m in zip(surf["n_shards"], surf["step_time_s"])

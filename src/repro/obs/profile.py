@@ -138,6 +138,31 @@ def timed(
 # ======================================================================
 # The vmapped replay kernel: compile-vs-execute split + seeds/sec
 # ======================================================================
+def _memory_analysis(compiled) -> Optional[Dict]:
+    """Peak-memory breakdown of a compiled replay program, when the
+    backend exposes ``memory_analysis`` (CPU/TPU do; absent → None)."""
+    try:
+        ma = compiled.memory_analysis()
+        alias = int(getattr(ma, "alias_size_in_bytes", 0))
+        return {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            # bytes of donated inputs XLA aliased into outputs — these are
+            # NOT double-counted at peak, so donation shrinks peak_bytes
+            "alias_bytes": alias,
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+            "peak_bytes": int(
+                ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+                - alias
+            ),
+        }
+    except Exception:  # pragma: no cover - backend without the API
+        return None
+
+
 def profile_replay(
     spec,
     strategy,
@@ -150,6 +175,10 @@ def profile_replay(
     workload=None,
     n_exec: int = 3,
     trace_dir: Optional[str] = None,
+    tile_slots: int = 8,
+    n_devices: Optional[int] = None,
+    donate: bool = True,
+    record_slots: bool = False,
 ) -> Dict:
     """Profile one family × strategy through the batched replay path.
 
@@ -162,12 +191,16 @@ def profile_replay(
                          synchronised), i.e. the marginal cost of more
                          Monte-Carlo — and ``seeds_per_s`` derived from it
 
-    ``trace_dir`` wraps the execute phase in ``jax.profiler.trace`` so
-    the op-level timeline can be opened in TensorBoard/Perfetto."""
+    ``tile_slots`` / ``n_devices`` profile the tile/shard execution shape
+    (results are bit-identical across both; only the cost moves), and
+    ``memory`` carries the compiled program's argument/output/temp
+    byte split so donation savings are observable. ``trace_dir`` wraps
+    the execute phase in ``jax.profiler.trace`` so the op-level timeline
+    can be opened in TensorBoard/Perfetto."""
     import jax
     from jax.experimental import enable_x64
 
-    from repro.scenarios.trajectory import compile_batch, replay_program
+    from repro.scenarios.trajectory import _quiet_donation, compile_batch, replay_program
 
     with stopwatch() as sw_tape:
         batch = compile_batch(spec, n_seeds)
@@ -180,12 +213,17 @@ def profile_replay(
         placement=placement,
         detector=detector,
         workload=workload,
+        tile_slots=tile_slots,
+        n_devices=n_devices,
+        donate=donate,
+        record_slots=record_slots,
     )
-    with enable_x64():
+    with enable_x64(), _quiet_donation():
         with stopwatch() as sw_lower:
             lowered = fn.lower(*args)
         with stopwatch() as sw_compile:
             compiled = lowered.compile()
+        memory = _memory_analysis(compiled)
         compiled(*args)  # warm-up: first dispatch pays transfers
         if trace_dir is not None:
             jax.profiler.start_trace(trace_dir)
@@ -201,12 +239,16 @@ def profile_replay(
         "n_seeds": int(n_seeds),
         "n_slots": int(batch.n_slots),
         "backend": jax.default_backend(),
+        "n_devices": int(n_devices or 1),
+        "tile_slots": int(tile_slots),
+        "donate": bool(donate),
         "tape_compile_s": round(sw_tape.s, 5),
         "lower_s": round(sw_lower.s, 5),
         "compile_s": round(sw_compile.s, 5),
         "execute_s": round(exec_s, 6),
         "seeds_per_s": round(n_seeds / max(exec_s, 1e-9), 1),
         "compile_over_execute": round((sw_lower.s + sw_compile.s) / max(exec_s, 1e-9), 1),
+        "memory": memory,
         "trace_dir": trace_dir,
     }
 

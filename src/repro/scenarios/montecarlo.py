@@ -239,6 +239,8 @@ def mc_trajectories(
     batch=None,
     detector="oracle",
     workload=None,
+    tile_slots: int = 8,
+    n_devices: Optional[int] = None,
 ) -> Dict:
     """Monte-Carlo over full engine trajectories for ANY scenario family.
 
@@ -255,7 +257,10 @@ def mc_trajectories(
     compilation across strategies; the same batch replays under any
     workload (``workload`` picks the registered cost model the trials
     are billed with when ``micro`` is not given — tapes are
-    workload-independent, only the billing changes).
+    workload-independent, only the billing changes). ``tile_slots`` and
+    ``n_devices`` set the kernel's tile/shard execution shape (sharding
+    the seed axis over forced-host or real devices) — both are
+    bit-identity-preserving, only throughput changes.
 
     Every run also attaches ``"frames"``: the cross-seed time-in-state
     distribution (:func:`repro.obs.metrics.aggregate_frames` over
@@ -281,6 +286,8 @@ def mc_trajectories(
         placement=placement,
         detector=detector,
         workload=workload,
+        tile_slots=tile_slots,
+        n_devices=n_devices,
     )
     frames = frames_from_replay(
         spec,

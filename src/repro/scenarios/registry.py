@@ -272,6 +272,37 @@ def _multi_window_storm() -> ScenarioSpec:
     )
 
 
+def _fleet_stress() -> ScenarioSpec:
+    """Fleet-scale stress family: 1024 nodes in 64 16-node racks over a
+    4-hour campaign, composing two rack-correlated outages, a 12-node
+    burst, two flaky repeat offenders and a degrading straggler against a
+    64-spare pool. This is the scale regime the rollback-recovery survey
+    (cs/0501002) warns about — and the family the benchmark certifies the
+    tiled/sharded replay kernel at ≥100× over the per-seed engine loop."""
+    return ScenarioSpec(
+        name="fleet_stress",
+        n_nodes=1024,
+        n_spares=64,
+        horizon_s=4 * 3600.0,
+        period_s=3600.0,
+        racks={i: i // 16 for i in range(1024)},
+        processes=[
+            FailureProcessSpec("rack", {"rack": 7, "t": 3000.0, "spread_s": 120.0}),
+            FailureProcessSpec("rack", {"rack": 21, "t": 9000.0, "spread_s": 120.0}),
+            FailureProcessSpec("burst", {"t": 5400.0, "k": 12}),
+            FailureProcessSpec("flaky", {"node": 100, "every_s": 1800.0}),
+            FailureProcessSpec("flaky", {"node": 900, "every_s": 2700.0}),
+            FailureProcessSpec(
+                "degrade",
+                {"node": 37, "t": 6000.0, "duration_s": 3600.0, "factor": 0.5, "ramp_s": 300.0},
+            ),
+        ],
+        repair_s=1800.0,
+        max_strikes=3,
+        description="1024 nodes, 4 h: 2 rack outages + 12-burst + 2 flaky + degrade",
+    )
+
+
 # ------------------------------------------------ workload-bound families ---
 def _genome_campaign() -> ScenarioSpec:
     """The paper's five-hour genome job at campaign scale, billed under its
@@ -351,6 +382,7 @@ for _f in (
     _partition_split,
     _straggler_drift,
     _mc_stress,
+    _fleet_stress,
     _multi_window_storm,
     _genome_campaign,
     _llm_pretrain_storm,

@@ -94,8 +94,11 @@ def test_kernel_matches_engine_exhaustive():
     for family in registry.names():
         spec = registry.get(family)
         m = micro_for(spec.n_nodes)
+        # engine trials dominate at fleet scale (~seconds per seed on
+        # 1k+ nodes) — thin the seed sweep there, keep it wide elsewhere
+        n_seeds = 25 if spec.n_nodes <= 64 else 4
         for strategy in ("central_single", "decentral", "agent", "core", "hybrid", "cold_restart"):
-            assert_trials_match(spec, strategy, 25, m)
+            assert_trials_match(spec, strategy, n_seeds, m)
 
 
 # ------------------------------------------- differential: special physics ---
