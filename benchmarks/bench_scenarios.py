@@ -35,6 +35,14 @@ Emits a JSON report (BENCH_OUT/scenarios.json) with these sections:
                     checkpointing >> multi-agent overhead — on the
                     genome_search (and analytic) workloads, and reports
                     every (workload, family) cell where it inverts.
+  traffic           the serving fleet (decode_fleet_churn) billed for
+                    request-level SLOs: per-strategy x per-autoscaler
+                    p50/p99 latency, dropped requests, and availability
+                    over the batched trajectory path. Certifies that the
+                    p99-billed strategy ordering differs from the
+                    makespan ordering — checkpoint-write stalls freeze
+                    serving, so the ranking a fleet operator sees is not
+                    the one the makespan bill suggests;
   profiling         the vmapped replay kernel's compile-vs-execute split
                     (jit AOT lower/compile vs steady-state execution) and
                     the headline seeds/sec throughput, plus measured
@@ -111,7 +119,11 @@ MULTI_AGENT = ("agent", "core", "hybrid")
 ORDERING_ASSERT_WORKLOADS = ("analytic", "genome_search")
 # observability section: small family so the exported trace stays readable
 OBS_FAMILY = "flaky_node"
-BENCH_SCHEMA_VERSION = 2  # v2: n_devices, per-family seeds_per_s, fleet cert
+# the serving-traffic section: the one family bound to a TrafficSpec,
+# billed under every registered autoscaler x these strategies
+TRAFFIC_FAMILY = "decode_fleet_churn"
+TRAFFIC_STRATEGIES = ("central_single", "agent", "core", "cold_restart")
+BENCH_SCHEMA_VERSION = 3  # v3: traffic section (per-strategy x autoscaler SLOs)
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
@@ -484,6 +496,64 @@ def run_workloads(n_seeds: int, assert_ordering: bool) -> dict:
     return out
 
 
+def run_traffic(n_seeds: int, assert_ordering: bool) -> dict:
+    """Request-level SLO matrix on the serving fleet: every registered
+    autoscaler x the serving strategies, over one shared tape batch.
+
+    Beyond the numbers, the section certifies the subsystem's reason to
+    exist: under the ``static`` capacity policy, ranking strategies by
+    mean p99 latency gives a *different order* than ranking them by mean
+    makespan. Checkpoint writes freeze the whole serving fleet (the
+    window strategies' p99 collapses) while cold restarts recompute
+    everything without ever stalling serving — so the cheapest strategy
+    by the classic bill is not the one a fleet operator should run."""
+    from repro.traffic import names as autoscaler_names
+
+    spec = registry.get(TRAFFIC_FAMILY)
+    batch = compile_batch(spec, n_seeds)  # shared across the whole matrix
+    out = {
+        "family": TRAFFIC_FAMILY,
+        "n_nodes": spec.n_nodes,
+        "n_seeds": n_seeds,
+        "traffic": spec.traffic.to_dict(),
+        "expected_requests": round(spec.traffic.expected_requests(spec.horizon_s), 1),
+        "matrix": {},
+    }
+    makespan_mean = {}
+    p99_mean = {}
+    for strat in TRAFFIC_STRATEGIES:
+        per = {}
+        for asc in autoscaler_names():
+            mc = mc_trajectories(spec, strat, batch=batch, autoscaler=asc)
+            slo = mc["slo"]
+            per[asc] = {
+                "p50_s": slo["p50_s"]["mean"] if slo["p50_s"] else None,
+                "p99_s": slo["p99_s"]["mean"] if slo["p99_s"] else None,
+                "dropped_mean": slo["dropped_mean"],
+                "availability_mean": slo["availability_mean"],
+                "survival_rate": round(mc["survival_rate"], 4),
+            }
+            if asc == "static":
+                makespan_mean[strat] = mc["mean_s"]
+                p99_mean[strat] = per[asc]["p99_s"]
+        out["matrix"][strat] = per
+    by_makespan = sorted(makespan_mean, key=makespan_mean.get)
+    by_p99 = sorted(p99_mean, key=lambda s: (p99_mean[s] is None, p99_mean[s]))
+    out["ordering"] = {
+        "by_makespan": by_makespan,
+        "by_p99_static": by_p99,
+        "differs": by_makespan != by_p99,
+    }
+    if assert_ordering:
+        assert out["ordering"]["differs"], (
+            f"p99-billed strategy ordering {by_p99} equals the makespan "
+            f"ordering on {TRAFFIC_FAMILY} — the serving bill adds no "
+            f"information; recalibrate the family's TrafficSpec"
+        )
+    out["asserted"] = assert_ordering
+    return out
+
+
 def run_profiling(micro, n_seeds: int, dry_run: bool) -> dict:
     """Compile-vs-execute split for the vmapped replay kernel (jit AOT
     lower/compile vs steady-state execution, seeds/sec throughput) plus
@@ -670,6 +740,13 @@ def write_bench_record(report: dict, dry_run: bool) -> str:
         "fleet_memory": report["profiling"]["fleet_memory"],
         "trace_parity": report["observability"]["trace_parity"],
         "workload_overhead_pct": overhead,
+        "traffic": {
+            "family": report["traffic"]["family"],
+            "n_nodes": report["traffic"]["n_nodes"],
+            "n_seeds": report["traffic"]["n_seeds"],
+            "slo": report["traffic"]["matrix"],
+            "ordering": report["traffic"]["ordering"],
+        },
     }
     path = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
     with open(path, "w") as f:
@@ -700,6 +777,11 @@ def main(argv=None):
     # counts keep the AOT split readable without re-paying the MC budget
     n_prof = 64 if args.dry_run else max(min(args.seeds, 1024), 256)
 
+    # the SLO matrix folds each trial's request tape in Python after the
+    # batched replay: fleet-size tapes keep the per-seed fold cheap, so
+    # modest counts give stable p99 means across the full matrix
+    n_traffic = 16 if args.dry_run else max(min(args.seeds, 64), 32)
+
     report = {
         "paper_exactness": check_paper_exactness(micro),
         "campaigns": run_campaigns(micro),
@@ -707,6 +789,7 @@ def main(argv=None):
         "trajectories": run_trajectories(micro, n_seeds, assert_speedup=not args.dry_run),
         "detectors": run_detectors(n_det, assert_bounds=not args.dry_run),
         "workloads": run_workloads(n_wl, assert_ordering=not args.dry_run),
+        "traffic": run_traffic(n_traffic, assert_ordering=not args.dry_run),
         "profiling": run_profiling(micro, n_prof, dry_run=args.dry_run),
         "observability": run_observability(micro, n_seeds=n_wl),
     }
@@ -782,6 +865,19 @@ def main(argv=None):
             )
     else:
         print("  WL ordering (checkpointing >> multi-agent) holds on every workload")
+    tr = report["traffic"]
+    for strat, per in tr["matrix"].items():
+        cells = " ".join(
+            f"{asc}:p99={per[asc]['p99_s']}s/drop={per[asc]['dropped_mean']:.0f}"
+            for asc in per
+        )
+        print(f"  SLO[{strat:14s}] {cells}")
+    print(
+        f"  SLO ordering on {tr['family']} ({tr['n_nodes']} shards): "
+        f"makespan={tr['ordering']['by_makespan']} vs "
+        f"p99={tr['ordering']['by_p99_static']} "
+        f"(differs={tr['ordering']['differs']})"
+    )
     for strat, p in report["profiling"]["replay"].items():
         print(
             f"  PROF[{strat:14s}] backend={p['backend']} devices={p['n_devices']} "

@@ -1,13 +1,13 @@
 """``registry-completeness``: everything registered is everywhere it
 must be — the bench matrix and the test suite.
 
-The repo's three pluggable axes (strategies, detectors, workloads) plus
-the scenario-family registry promise that "registering once makes it
-appear everywhere". The *registries* deliver half of that (``names()``
+The repo's pluggable axes (strategies, detectors, workloads, traffic
+autoscalers) plus the scenario-family registry promise that "registering
+once makes it appear everywhere". The *registries* deliver half of that (``names()``
 iteration is dynamic); this rule proves the other half statically:
 
-* every ``@register("<name>")``-ed strategy/detector/workload in source
-  modules is **benched** — the benchmark either iterates that axis's
+* every ``@register("<name>")``-ed strategy/detector/workload/autoscaler
+  in source modules is **benched** — the benchmark either iterates that axis's
   ``names()`` (resolved through its imports) or names it literally — and
   **tested** — some test module iterates the axis's ``names()`` or names
   it literally;
@@ -42,6 +42,7 @@ AXES = {
     "detectors": ".telemetry",
     "workloads": ".workloads",
     "scenarios": ".scenarios",
+    "autoscalers": ".traffic",
 }
 
 
@@ -144,9 +145,9 @@ def _names_axes_called(mod: ModuleSource) -> Set[str]:
 @register("registry-completeness")
 class RegistryCompletenessRule(Rule):
     description = (
-        "every registered strategy/detector/workload/scenario reaches the "
-        "bench matrix and at least one test; every scenario factory is "
-        "registered"
+        "every registered strategy/detector/workload/autoscaler/scenario "
+        "reaches the bench matrix and at least one test; every scenario "
+        "factory is registered"
     )
 
     def check(self, project: Project) -> List[Finding]:

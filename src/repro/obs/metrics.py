@@ -37,6 +37,7 @@ __all__ = [
     "frame_from_result",
     "frames_from_replay",
     "aggregate_frames",
+    "aggregate_slo",
     "availability_timeline",
     "verdict_ledger",
 ]
@@ -224,6 +225,37 @@ def aggregate_frames(frames: Sequence[MetricFrame]) -> Dict:
     if lost:
         out["mean_failed_at_s"] = round(float(np.mean(lost)), 2)
     return out
+
+
+def aggregate_slo(out: Dict[str, np.ndarray]) -> Optional[Dict]:
+    """Cross-seed summary of a ``replay_batch`` output's request-level SLO
+    arrays (``slo_p50_s`` / ``slo_p99_s`` / ``slo_dropped`` /
+    ``slo_availability`` — present only when the scenario declares a
+    traffic spec; returns None otherwise). Latency stats are taken over
+    the seeds whose campaigns admitted any traffic (finite percentiles);
+    drop/availability means cover every seed."""
+    if "slo_p99_s" not in out:
+        return None
+    p50 = np.asarray(out["slo_p50_s"], np.float64)
+    p99 = np.asarray(out["slo_p99_s"], np.float64)
+    keep = np.isfinite(p99)
+    lat = lambda v: (
+        {
+            "mean": round(float(np.mean(v[keep])), 6),
+            "p95_across_seeds": round(float(np.percentile(v[keep], 95)), 6),
+        }
+        if keep.any()
+        else None
+    )
+    return {
+        "n_seeds": int(p99.size),
+        "n_with_traffic": int(keep.sum()),
+        "p50_s": lat(p50),
+        "p99_s": lat(p99),
+        "dropped_mean": round(float(np.mean(out["slo_dropped"])), 3),
+        "availability_mean": round(float(np.mean(out["slo_availability"])), 6),
+        "availability_min": round(float(np.min(out["slo_availability"])), 6),
+    }
 
 
 def availability_timeline(trace, n_hosts: Optional[int] = None) -> List[Tuple[float, float]]:

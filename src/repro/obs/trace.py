@@ -65,6 +65,7 @@ __all__ = [
     "TraceEvent",
     "CampaignTrace",
     "TraceRecorder",
+    "outage_windows",
     "reconstruct_traces",
     "MODE_OUTCOME",
 ]
@@ -201,6 +202,28 @@ class CampaignTrace:
             "n_hosts": self.n_hosts,
             "events": [ev.to_dict() for ev in self.events],
         }
+
+
+def outage_windows(trace: "CampaignTrace") -> List[Tuple[int, float, float]]:
+    """Per-host down windows ``(node, down_s, up_s)`` from a trace.
+
+    Each ``failure`` event opens a window on its node; the node's next
+    ``provision`` event closes it. A host that never comes back (failure
+    with no later provision — blacklisted, stranded, or the campaign
+    ended first) stays down until ``end_s``. This is the serving-side
+    view of a trace: the same intervals the SLO biller charges as shard
+    outages, exposed for inspection and plotting."""
+    open_at: Dict[int, float] = {}
+    windows: List[Tuple[int, float, float]] = []
+    for ev in sorted(trace.events, key=TraceEvent.sort_key):
+        if ev.kind == "failure" and ev.node not in open_at:
+            open_at[ev.node] = ev.t
+        elif ev.kind == "provision" and ev.node in open_at:
+            windows.append((ev.node, open_at.pop(ev.node), ev.t))
+    for node, down_s in open_at.items():
+        windows.append((node, down_s, float(trace.end_s)))
+    windows.sort(key=lambda w: (w[1], w[0]))
+    return windows
 
 
 def schedule_events(

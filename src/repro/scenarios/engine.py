@@ -107,6 +107,13 @@ class CampaignResult:
     slowdown_s: float = 0.0  # degrade windows: extra synchronous-step time
     detector: str = "oracle"
     workload: str = "analytic"
+    # request-level SLO billing (populated only when the spec declares a
+    # traffic model; repro.traffic.slo.bill_slo on both billing paths)
+    autoscaler: Optional[str] = None
+    slo_p50_s: Optional[float] = None
+    slo_p99_s: Optional[float] = None
+    slo_dropped: Optional[float] = None
+    slo_availability: Optional[float] = None
     events: List[Dict] = field(default_factory=list)
     # populated only when the engine ran with trace=True; never serialised
     # by to_dict, so campaign records stay byte-identical
@@ -137,6 +144,12 @@ class CampaignResult:
             d["detector"] = self.detector
         if self.workload != "analytic":
             d["workload"] = self.workload
+        if self.slo_availability is not None:
+            d["autoscaler"] = self.autoscaler
+            d["slo_p50_s"] = round(self.slo_p50_s, 6)
+            d["slo_p99_s"] = round(self.slo_p99_s, 6)
+            d["slo_dropped"] = round(self.slo_dropped, 3)
+            d["slo_availability"] = round(self.slo_availability, 6)
         return d
 
 
@@ -154,6 +167,7 @@ class CampaignEngine:
         placement: Optional[str] = None,
         detector: "str | Detector" = "oracle",
         workload: "str | Workload | None" = None,
+        autoscaler: Optional[str] = None,
         trace: bool = False,
     ):
         try:
@@ -180,6 +194,9 @@ class CampaignEngine:
         self.detector = (
             detector if isinstance(detector, Detector) else detector_registry.get(detector)
         )
+        # capacity policy for request-level SLO billing (a repro.traffic
+        # registry name; None -> the traffic spec's declared default)
+        self.autoscaler = autoscaler
         # structured event timeline (repro.obs): opt-in, zero overhead off
         self.trace = bool(trace)
 
@@ -414,6 +431,38 @@ class CampaignEngine:
                 + res.probe_s
                 + res.slowdown_s
             )
+
+        # request-level SLO billing: one shared deterministic function of
+        # the compiled tape + verdicts, so the replay kernel's per-seed
+        # bill is bitwise identical (the degrade_slowdown_s idiom)
+        if spec.traffic is not None:
+            from repro.core.rules import SD_THRESHOLD_BYTES
+            from repro.scenarios.trajectory import _payload_bytes
+            from repro.strategies.base import CostContext
+            from repro.traffic.slo import bill_slo
+
+            bill = bill_slo(
+                spec,
+                times=tape.times,
+                victim=tape.victim,
+                parent=tape.parent,
+                predictable=tape.predictable,
+                verdicts=np.asarray(verdicts, bool),
+                draws=tape.repair_draws,
+                table=strat.cost_table(
+                    CostContext(micro=self.micro, period_h=spec.period_s / 3600.0)
+                ),
+                wtable=self.workload.cost_table(self.profile, n_nodes=spec.n_nodes),
+                seed=self.seed,
+                autoscaler=self.autoscaler,
+                rules_agent_small=_payload_bytes(self.payload_elems)
+                <= SD_THRESHOLD_BYTES,
+            )
+            res.autoscaler = bill.autoscaler
+            res.slo_p50_s = bill.p50_s
+            res.slo_p99_s = bill.p99_s
+            res.slo_dropped = bill.dropped
+            res.slo_availability = bill.availability
 
         if rec_ is not None:
             from repro.strategies.base import CostContext

@@ -239,6 +239,7 @@ def mc_trajectories(
     batch=None,
     detector="oracle",
     workload=None,
+    autoscaler=None,
     tile_slots: int = 8,
     n_devices: Optional[int] = None,
 ) -> Dict:
@@ -266,8 +267,12 @@ def mc_trajectories(
     distribution (:func:`repro.obs.metrics.aggregate_frames` over
     per-campaign :class:`~repro.obs.metrics.MetricFrame` decompositions)
     — p5/p50/p95 per component for this (family × strategy × workload ×
-    detector) cell, each frame summing to its billed total exactly."""
-    from repro.obs.metrics import aggregate_frames, frames_from_replay
+    detector) cell, each frame summing to its billed total exactly. When
+    the scenario declares a traffic spec, an ``"slo"`` block
+    (:func:`repro.obs.metrics.aggregate_slo`) summarises the request-level
+    p50/p99 latency, drop, and availability bills across seeds, under the
+    ``autoscaler`` the trials were billed with."""
+    from repro.obs.metrics import aggregate_frames, aggregate_slo, frames_from_replay
     from repro.scenarios import registry
     from repro.scenarios.trajectory import compile_batch, replay_batch
     from repro.telemetry.detector import Detector
@@ -286,6 +291,7 @@ def mc_trajectories(
         placement=placement,
         detector=detector,
         workload=workload,
+        autoscaler=autoscaler,
         tile_slots=tile_slots,
         n_devices=n_devices,
     )
@@ -301,7 +307,9 @@ def mc_trajectories(
     ok = out["survived"]
     alive = totals[ok]
     stat = lambda f, d=np.nan: float(f(alive)) if alive.size else d
+    slo = aggregate_slo(out)
     return {
+        **({"slo": slo} if slo is not None else {}),
         "scenario": spec.name,
         "strategy": strategy,
         # the cost model the trials were billed under (advisory when an

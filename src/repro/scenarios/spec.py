@@ -63,6 +63,7 @@ from repro.core.failure import (
     FailureEvent,
     FailureModel,
 )
+from repro.traffic.arrivals import TrafficSpec
 
 PROCESS_KINDS = (
     "periodic",
@@ -116,6 +117,11 @@ class ScenarioSpec:
     # set for the paper's two patterns so sim.py can take the exact
     # closed-form path (Tables 1-2 reproduce bit-for-bit):
     closed_form: Optional[str] = None  # "periodic" | "random" | None
+    # offered request load (repro.traffic): when set, campaigns on this
+    # scenario are additionally billed in p50/p99 latency, dropped-request
+    # and availability terms — identically by the engine and the replay
+    # kernel (bill_slo is one shared deterministic function)
+    traffic: Optional[TrafficSpec] = None
 
     # ------------------------------------------------------------------ DSL
     def to_dict(self) -> Dict:
@@ -134,6 +140,9 @@ class ScenarioSpec:
         repair_s = d.get("repair_s")
         if isinstance(repair_s, (tuple, list)):  # JSON round-trips tuples as lists
             d["repair_s"] = (str(repair_s[0]), float(repair_s[1]), float(repair_s[2]))
+        traffic = d.get("traffic")
+        if traffic is not None and not isinstance(traffic, TrafficSpec):
+            d["traffic"] = TrafficSpec.from_dict(traffic)
         return ScenarioSpec(**d)
 
     def sample_repair(self, rng: np.random.Generator) -> Optional[float]:

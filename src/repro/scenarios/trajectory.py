@@ -837,9 +837,11 @@ def _resolve_program(
     """Shared front half of the replay path: resolve strategy / detector /
     workload micro, pre-sample per-seed verdict tapes, pad the slot axis
     to the tile multiple, build (or fetch from cache) the jitted vmapped
-    program. Returns ``(fn, args, detector, verdicts)`` with
-    ``args = (coeffs, tape)``; ``fn(*args)`` — and any ``fn.lower(*args)``
-    — must run under ``enable_x64``."""
+    program. Returns ``(fn, args, detector, verdicts, ctx)`` with
+    ``args = (coeffs, tape)`` and ``ctx`` the resolved billing inputs
+    (strategy cost table, ``rules_agent_small``) the SLO biller shares
+    with the engine; ``fn(*args)`` — and any ``fn.lower(*args)`` —
+    must run under ``enable_x64``."""
     from jax.experimental import enable_x64
 
     from repro.telemetry import registry as detector_registry
@@ -950,7 +952,8 @@ def _resolve_program(
     with enable_x64():  # program construction traces x64 constants
         fn = _compiled_replayer(static, tstatic)
     args = (_table_coeffs(table), tape)
-    return fn, args, det, verdicts
+    ctx = {"table": table, "rules_agent_small": static.rules_agent_small}
+    return fn, args, det, verdicts, ctx
 
 
 def replay_program(
@@ -977,7 +980,7 @@ def replay_program(
     what :func:`repro.obs.profile.profile_replay` measures. Everything
     (lower, compile, invoke) must run under
     ``jax.experimental.enable_x64``, the kernel's required precision."""
-    fn, args, _, _ = _resolve_program(
+    fn, args, _, _, _ = _resolve_program(
         spec,
         batch,
         strategy,
@@ -1006,6 +1009,7 @@ def replay_batch(
     payload_elems: int = 1 << 10,
     detector="oracle",
     workload=None,
+    autoscaler=None,
     record_slots: bool = False,
     tile_slots: int = 8,
     n_devices: Optional[int] = None,
@@ -1053,7 +1057,7 @@ def replay_batch(
 
     from repro.scenarios.spec import degrade_slowdown_s
 
-    fn, args, det, verdicts = _resolve_program(
+    fn, args, det, verdicts, ctx = _resolve_program(
         spec,
         batch,
         strategy,
@@ -1084,6 +1088,47 @@ def replay_batch(
     if slow:
         out["total_s"] = out["total_s"] + slow
     out["slowdown_s"] = np.full(batch.n_seeds, slow, np.float64)
+
+    # request-level SLO billing: the identical shared deterministic
+    # function (and identical inputs — valid-prefix tape slices + the
+    # per-seed verdict tapes) the engine calls, so the four SLO arrays
+    # are trial-for-trial bitwise equal to CampaignEngine's fields
+    if getattr(spec, "traffic", None) is not None:
+        from repro.traffic.slo import bill_slo
+        from repro.workloads import resolve as resolve_workload
+
+        wtable = resolve_workload(workload, spec).cost_table(
+            profile, n_nodes=spec.n_nodes
+        )
+        S = batch.n_seeds
+        slo = {
+            "slo_p50_s": np.empty(S, np.float64),
+            "slo_p99_s": np.empty(S, np.float64),
+            "slo_dropped": np.empty(S, np.float64),
+            "slo_availability": np.empty(S, np.float64),
+        }
+        for s in range(S):
+            m = batch.valid[s]
+            bill = bill_slo(
+                spec,
+                times=batch.times[s][m],
+                victim=batch.victim[s][m],
+                parent=batch.parent[s][m],
+                predictable=batch.predictable[s][m],
+                verdicts=verdicts[s][m],
+                draws=batch.repair_draws[s][m],
+                table=ctx["table"],
+                wtable=wtable,
+                seed=int(batch.seeds[s]),
+                autoscaler=autoscaler,
+                rules_agent_small=ctx["rules_agent_small"],
+            )
+            slo["slo_p50_s"][s] = bill.p50_s
+            slo["slo_p99_s"][s] = bill.p99_s
+            slo["slo_dropped"][s] = bill.dropped
+            slo["slo_availability"][s] = bill.availability
+        out.update(slo)
+
     if record_slots:
         out["slot_verdict"] = verdicts
     return out

@@ -1,0 +1,40 @@
+"""Serving-traffic subsystem: arrival processes, SLO billing, autoscalers.
+
+The fourth registry-backed axis (after strategies, detectors and
+workloads): a :class:`~repro.traffic.arrivals.TrafficSpec` describes
+the offered request load over a campaign horizon, :func:`~repro.traffic.
+slo.bill_slo` prices one trial in p50/p99 latency / dropped-request /
+availability terms — billed identically by the reference engine and the
+batched replay kernel — and registered :class:`~repro.traffic.autoscale.
+Autoscaler` policies decide how the fleet's capacity follows failures
+and load. Register a policy once and it appears in the benchmark's
+traffic matrix automatically.
+"""
+from repro.traffic import registry
+from repro.traffic.arrivals import (
+    ARRIVAL_STREAM,
+    RequestTape,
+    TrafficSpec,
+    compile_request_tape,
+)
+from repro.traffic.autoscale import Autoscaler, CapacityPlan
+from repro.traffic.registry import get, get_class, names, register, unregister
+from repro.traffic.slo import ServingTimeline, SloBill, bill_slo
+
+__all__ = [
+    "ARRIVAL_STREAM",
+    "Autoscaler",
+    "CapacityPlan",
+    "RequestTape",
+    "ServingTimeline",
+    "SloBill",
+    "TrafficSpec",
+    "bill_slo",
+    "compile_request_tape",
+    "get",
+    "get_class",
+    "names",
+    "register",
+    "registry",
+    "unregister",
+]

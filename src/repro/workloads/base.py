@@ -42,8 +42,11 @@ from typing import Dict, Tuple
 import numpy as np
 
 #: shard counts every builtin tabulates its surfaces at (powers of two up
-#: to a pod slice; :meth:`WorkloadCostTable.at` interpolates between them)
-DEFAULT_SHARD_GRID: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+#: to a full pod; :meth:`WorkloadCostTable.at` interpolates between them).
+#: The grid reaches 1024 so fleet-scale scenario families (256+ serving
+#: shards) sit inside the tabulated range instead of extrapolating off
+#: its edge.
+DEFAULT_SHARD_GRID: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 
 
 @dataclass(frozen=True)

@@ -339,7 +339,7 @@ def test_bench_record_schema():
         pytest.skip("no BENCH_scenarios.json at repo root (bench not yet run)")
     with open(path) as f:
         rec = json.load(f)
-    assert rec["schema_version"] == 2
+    assert rec["schema_version"] == 3
     assert isinstance(rec["seeds_per_s"], (int, float)) and rec["seeds_per_s"] > 0
     assert {"montecarlo", "trajectory", "fleet", "min_required"} <= set(rec["speedup"])
     assert rec["trace_parity"] is True
@@ -352,3 +352,10 @@ def test_bench_record_schema():
     for wl, fams in rec["workload_overhead_pct"].items():
         for fam, cells in fams.items():
             assert all(v is None or isinstance(v, (int, float)) for v in cells.values())
+    # v3: the serving-traffic block — per-strategy x per-autoscaler SLOs
+    traffic = rec["traffic"]
+    assert traffic["family"] == "decode_fleet_churn" and traffic["n_nodes"] >= 256
+    assert {"by_makespan", "by_p99_static", "differs"} <= set(traffic["ordering"])
+    for strat, per in traffic["slo"].items():
+        for asc, cell in per.items():
+            assert {"p50_s", "p99_s", "dropped_mean", "availability_mean"} <= set(cell)
