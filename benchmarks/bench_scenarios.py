@@ -43,6 +43,14 @@ Emits a JSON report (BENCH_OUT/scenarios.json) with these sections:
                     makespan ordering — checkpoint-write stalls freeze
                     serving, so the ranking a fleet operator sees is not
                     the one the makespan bill suggests;
+  orchestrator      the live daemon closing the loop on the simulator:
+                    deterministic stub campaigns on live_genome_single
+                    (fake clock, no subprocesses) supervised end to end
+                    for >= 2 strategies and under EVERY registered fault
+                    injector, comparing the live (scaled) makespan against
+                    the engine's predicted bill for the same (spec, seed).
+                    Asserts the live/predicted relative error stays inside
+                    the tolerance band for the death-path injectors;
   profiling         the vmapped replay kernel's compile-vs-execute split
                     (jit AOT lower/compile vs steady-state execution) and
                     the headline seeds/sec throughput, plus measured
@@ -123,7 +131,18 @@ OBS_FAMILY = "flaky_node"
 # billed under every registered autoscaler x these strategies
 TRAFFIC_FAMILY = "decode_fleet_churn"
 TRAFFIC_STRATEGIES = ("central_single", "agent", "core", "cold_restart")
-BENCH_SCHEMA_VERSION = 3  # v3: traffic section (per-strategy x autoscaler SLOs)
+# the live-orchestrator section: stub campaigns on the live scenario,
+# live (scaled) makespan vs the engine's predicted bill per strategy and
+# per registered injector; parity asserted on the death-path injectors
+ORCH_SCENARIO = "live_genome_single"
+ORCH_STRATEGIES = ("central_single", "core")
+ORCH_TIME_SCALE = 900.0  # 1 wall second = 15 simulated minutes
+ORCH_TOLERANCE = 0.25  # |live - predicted| / predicted band
+# parity is only meaningful where the live run replays the predicted
+# failures as deaths: "none" skips the billed failure entirely, "stall"
+# pays the detection timeout, "slow" really degrades the pace
+ORCH_PARITY_INJECTORS = ("kill",)
+BENCH_SCHEMA_VERSION = 4  # v4: orchestrator section (live vs predicted makespan)
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
@@ -554,6 +573,92 @@ def run_traffic(n_seeds: int, assert_ordering: bool) -> dict:
     return out
 
 
+def run_orchestrator(assert_tolerance: bool) -> dict:
+    """The live daemon closing the loop: supervise deterministic stub
+    campaigns on the live scenario and compare the live (scaled) makespan
+    against the engine's predicted bill for the same (spec, seed).
+
+    Two sweeps over one scenario (``live_genome_single``):
+
+      strategies   >= 2 FT strategies under the ``kill`` injector — the
+                   live campaign must land within ORCH_TOLERANCE of the
+                   engine's prediction for each;
+      injectors    central_single under EVERY registered injector — the
+                   full fault-injection axis drives the daemon end to
+                   end; parity is asserted only for ``kill`` (``none``
+                   never pays the predicted failure bill, ``stall`` pays
+                   the detection timeout, ``slow`` really degrades the
+                   pace — their live totals legitimately leave the band).
+
+    Stub campaigns replay the daemon's real control loop (heartbeat
+    ingest, detector verdicts, strategy resolution, modelled-stall
+    resumes) under a fake clock — deterministic and subprocess-free, so
+    the recorded numbers are stable across hosts."""
+    import tempfile
+
+    from repro.orchestrator import registry as injector_registry
+    from repro.orchestrator.daemon import OrchestratorDaemon
+    from repro.orchestrator.plan import make_live_plan
+    from repro.orchestrator.spool import Spool
+    from repro.orchestrator.testing import FakeClock, StubLauncher, scripted_sleeper
+
+    def live_run(strategy: str, injector: str) -> dict:
+        spec = registry.get(ORCH_SCENARIO)
+        plan = make_live_plan(
+            spec, time_scale=ORCH_TIME_SCALE, seed=0,
+            strategy=strategy, calibrate=False,
+        )
+        clock = FakeClock()
+        spool = Spool(tempfile.mkdtemp(prefix="bench_orch_"))
+        launcher = StubLauncher(spool, clock)
+        daemon = OrchestratorDaemon(
+            plan, spool, launcher, injector=injector, clock=clock,
+            async_sleep=scripted_sleeper(clock, launcher),
+            poll_wall_s=0.05, deadline_wall_s=600.0,
+            stall_timeout_wall_s=3.0 * plan.step_wall_s,
+        )
+        rep = daemon.run_sync()
+        return {
+            "survived": rep.survived,
+            "live_total_s": round(rep.live_total_s, 1) if rep.live_total_s else None,
+            "predicted_total_s": round(rep.predicted_total_s, 1),
+            "rel_err": round(rep.rel_err, 4) if rep.live_total_s else None,
+            "n_events": rep.n_events,
+            "n_handled": rep.n_handled,
+            "n_stalls": rep.n_stalls,
+            "n_shards_done": len(rep.results),
+        }
+
+    out = {
+        "scenario": ORCH_SCENARIO,
+        "time_scale": ORCH_TIME_SCALE,
+        "tolerance": ORCH_TOLERANCE,
+        "strategies": {},
+        "injectors": {},
+    }
+    for strat in ORCH_STRATEGIES:
+        out["strategies"][strat] = live_run(strat, "kill")
+    for inj in injector_registry.names():  # the full injection axis
+        out["injectors"][inj] = live_run("central_single", inj)
+
+    if assert_tolerance:
+        for strat, r in out["strategies"].items():
+            assert r["survived"], f"live campaign lost under {strat}"
+            assert r["rel_err"] is not None and r["rel_err"] < ORCH_TOLERANCE, (
+                f"live makespan {r['live_total_s']}s vs predicted "
+                f"{r['predicted_total_s']}s under {strat}: rel_err "
+                f"{r['rel_err']} outside the {ORCH_TOLERANCE} band"
+            )
+        for inj in ORCH_PARITY_INJECTORS:
+            r = out["injectors"][inj]
+            assert r["survived"] and r["rel_err"] < ORCH_TOLERANCE, (
+                f"injector {inj}: live {r['live_total_s']}s vs predicted "
+                f"{r['predicted_total_s']}s (rel_err {r['rel_err']})"
+            )
+    out["asserted"] = assert_tolerance
+    return out
+
+
 def run_profiling(micro, n_seeds: int, dry_run: bool) -> dict:
     """Compile-vs-execute split for the vmapped replay kernel (jit AOT
     lower/compile vs steady-state execution, seeds/sec throughput) plus
@@ -747,6 +852,7 @@ def write_bench_record(report: dict, dry_run: bool) -> str:
             "slo": report["traffic"]["matrix"],
             "ordering": report["traffic"]["ordering"],
         },
+        "orchestrator": report["orchestrator"],
     }
     path = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
     with open(path, "w") as f:
@@ -790,6 +896,7 @@ def main(argv=None):
         "detectors": run_detectors(n_det, assert_bounds=not args.dry_run),
         "workloads": run_workloads(n_wl, assert_ordering=not args.dry_run),
         "traffic": run_traffic(n_traffic, assert_ordering=not args.dry_run),
+        "orchestrator": run_orchestrator(assert_tolerance=not args.dry_run),
         "profiling": run_profiling(micro, n_prof, dry_run=args.dry_run),
         "observability": run_observability(micro, n_seeds=n_wl),
     }
@@ -878,6 +985,17 @@ def main(argv=None):
         f"p99={tr['ordering']['by_p99_static']} "
         f"(differs={tr['ordering']['differs']})"
     )
+    orc = report["orchestrator"]
+    for strat, r in orc["strategies"].items():
+        print(
+            f"  ORCH[{strat:14s}] live={r['live_total_s']}s "
+            f"predicted={r['predicted_total_s']}s rel_err={r['rel_err']} "
+            f"(band {orc['tolerance']})"
+        )
+    inj_cells = " ".join(
+        f"{inj}:rel_err={r['rel_err']}" for inj, r in orc["injectors"].items()
+    )
+    print(f"  ORCH[injector axis ] {inj_cells}")
     for strat, p in report["profiling"]["replay"].items():
         print(
             f"  PROF[{strat:14s}] backend={p['backend']} devices={p['n_devices']} "

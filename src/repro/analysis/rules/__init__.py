@@ -1,7 +1,8 @@
-"""Built-in rules: importing this package registers the five invariant
+"""Built-in rules: importing this package registers the six invariant
 families in declaration order (= run/report order)."""
 from repro.analysis.rules import purity  # noqa: F401
 from repro.analysis.rules import parity  # noqa: F401
 from repro.analysis.rules import registries  # noqa: F401
 from repro.analysis.rules import units  # noqa: F401
 from repro.analysis.rules import dtypes  # noqa: F401
+from repro.analysis.rules import wallclock  # noqa: F401

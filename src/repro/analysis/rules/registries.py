@@ -2,11 +2,12 @@
 must be — the bench matrix and the test suite.
 
 The repo's pluggable axes (strategies, detectors, workloads, traffic
-autoscalers) plus the scenario-family registry promise that "registering
+autoscalers, orchestrator fault injectors) plus the scenario-family
+registry promise that "registering
 once makes it appear everywhere". The *registries* deliver half of that (``names()``
 iteration is dynamic); this rule proves the other half statically:
 
-* every ``@register("<name>")``-ed strategy/detector/workload/autoscaler
+* every ``@register("<name>")``-ed strategy/detector/workload/autoscaler/injector
   in source modules is **benched** — the benchmark either iterates that axis's
   ``names()`` (resolved through its imports) or names it literally — and
   **tested** — some test module iterates the axis's ``names()`` or names
@@ -43,6 +44,7 @@ AXES = {
     "workloads": ".workloads",
     "scenarios": ".scenarios",
     "autoscalers": ".traffic",
+    "injectors": ".orchestrator",
 }
 
 
@@ -145,9 +147,9 @@ def _names_axes_called(mod: ModuleSource) -> Set[str]:
 @register("registry-completeness")
 class RegistryCompletenessRule(Rule):
     description = (
-        "every registered strategy/detector/workload/autoscaler/scenario "
-        "reaches the bench matrix and at least one test; every scenario "
-        "factory is registered"
+        "every registered strategy/detector/workload/autoscaler/injector/"
+        "scenario reaches the bench matrix and at least one test; every "
+        "scenario factory is registered"
     )
 
     def check(self, project: Project) -> List[Finding]:

@@ -22,8 +22,9 @@ outage coming from its neighbours' logs before its own node degrades.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -80,6 +81,7 @@ class HeartbeatService:
         seed: int = 0,
         tick_s: float = 1.0,
         racks: Optional[Dict[int, int]] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.n = n_nodes
         self.tick_s = tick_s
@@ -88,6 +90,12 @@ class HeartbeatService:
         self.logs: Dict[int, List[np.ndarray]] = {i: [] for i in range(n_nodes)}
         self.latency_ewma = np.zeros(n_nodes, np.float32)
         self.racks: Dict[int, int] = racks or {}  # node -> rack id
+        # liveness clock is injected so stall detection is testable with a
+        # fake clock; the default reference is only *called* when a caller
+        # doesn't pass explicit beat/now timestamps (the orchestrator daemon
+        # always does, keeping simulation paths wall-clock-free)
+        self.clock: Callable[[], float] = clock if clock is not None else time.monotonic
+        self.last_beat_s: Dict[int, float] = {}
 
     def add_node(self, rack: Optional[int] = None) -> int:
         """Grow the service with the cluster: a newly provisioned host
@@ -133,6 +141,26 @@ class HeartbeatService:
 
     def alive(self, node: int) -> bool:
         return self.health[node].state != "failed"
+
+    # ----------------------------------------------------- liveness beats ---
+    def beat(self, node: int, at_s: Optional[float] = None):
+        """Record a liveness beat from ``node`` at ``at_s`` (injected-clock
+        "now" when omitted). The orchestrator daemon forwards each real
+        worker heartbeat here, so stall detection is one shared code path
+        for simulated and live clusters."""
+        self.last_beat_s[node] = self.clock() if at_s is None else float(at_s)
+
+    def stalled(self, timeout_s: float, now_s: Optional[float] = None) -> List[int]:
+        """Nodes whose last beat is older than ``timeout_s`` at ``now_s``
+        (injected-clock "now" when omitted). Only nodes that have beaten
+        at least once and are not already marked failed are considered —
+        silence from a known-dead node is not a *new* stall."""
+        now = self.clock() if now_s is None else float(now_s)
+        return [
+            i
+            for i, t in sorted(self.last_beat_s.items())
+            if self.alive(i) and now - t > timeout_s
+        ]
 
     def tick(self) -> Dict[int, np.ndarray]:
         """One heartbeat round; returns {node: latest features}."""

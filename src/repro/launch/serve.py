@@ -1,11 +1,17 @@
 """Serving launcher: batched prefill + decode with per-step latency stats.
 
   PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-9b \
-      --batch 4 --prompt-len 64 --new-tokens 32
+      --batch 4 --prompt-len 64 --new-tokens 32 [--json]
+
+Supervision contract: ``--json`` makes the final line one JSON status
+object, and exit codes are typed per ``repro.orchestrator.contract``
+(0 ok, 42 fault-injected, 43 stalled, 44 preempted) so a daemon or CI
+lane can supervise this entrypoint without scraping the human text.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -24,6 +30,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="final line is one machine-readable JSON status object")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -59,9 +67,22 @@ def main():
         jax.block_until_ready(tok)
         lat.append(time.perf_counter() - t0)
     lat = np.array(lat[1:])  # drop the compile step
-    print(f"{args.arch}: prefill {B}x{S}: {t_pre*1e3:.1f} ms | decode p50 "
-          f"{np.percentile(lat,50)*1e3:.2f} ms p99 {np.percentile(lat,99)*1e3:.2f} ms "
-          f"| {B/np.mean(lat):.0f} tok/s")
+    if args.as_json:
+        from repro.orchestrator.contract import EXIT_OK
+
+        print(json.dumps({
+            "status": "ok",
+            "exit_code": EXIT_OK,
+            "arch": args.arch,
+            "prefill_s": round(float(t_pre), 6),
+            "decode_p50_s": round(float(np.percentile(lat, 50)), 6),
+            "decode_p99_s": round(float(np.percentile(lat, 99)), 6),
+            "tokens_per_s": round(float(B / np.mean(lat)), 2),
+        }))
+    else:
+        print(f"{args.arch}: prefill {B}x{S}: {t_pre*1e3:.1f} ms | decode p50 "
+              f"{np.percentile(lat,50)*1e3:.2f} ms p99 {np.percentile(lat,99)*1e3:.2f} ms "
+              f"| {B/np.mean(lat):.0f} tok/s")
 
 
 if __name__ == "__main__":

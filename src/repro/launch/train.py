@@ -2,14 +2,22 @@
 policy, failure injection from the paper's models.
 
   PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 50 \
-      --policy hybrid --failures random --per-hour 2 [--full]
+      --policy hybrid --failures random --per-hour 2 [--full] [--json]
 
 On this CPU container the default is the reduced config; --full uses the
 exact assigned config (only sensible on a real pod — it will be slow).
+
+Supervision contract (the orchestrator daemon and CI parse this, never
+the human text): ``--json`` makes the final line a single JSON object
+with the run's counters, and the exit code is typed per
+``repro.orchestrator.contract`` — 0 ok, 42 fault-injected, 43 stalled,
+44 preempted (this entrypoint exits 0 on success; the non-zero codes are
+what a supervised run reports when killed through those paths).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import shutil
 
 import jax
@@ -41,6 +49,8 @@ def main():
     ap.add_argument("--async-ckpt", action="store_true")
     ap.add_argument("--hosts", type=int, default=4)
     ap.add_argument("--full", action="store_true", help="full assigned config")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="final line is one machine-readable JSON status object")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -71,11 +81,29 @@ def main():
         async_ckpt=args.async_ckpt, seed=11,
     )
     rep = trainer.run(args.steps, failures=failures)
-    print(f"steps={rep.steps_run} reexec={rep.steps_reexecuted} "
-          f"migrations={rep.migrations} restores={rep.restores} "
-          f"checkpoints={rep.checkpoints}")
-    print(f"train={rep.train_time_s:.2f}s ft={rep.ft_time_s:.3f}s "
-          f"overhead={100*rep.overhead_fraction:.1f}%")
+    if args.as_json:
+        from repro.orchestrator.contract import EXIT_OK
+
+        print(json.dumps({
+            "status": "ok",
+            "exit_code": EXIT_OK,
+            "arch": args.arch,
+            "policy": args.policy,
+            "steps": rep.steps_run,
+            "steps_reexecuted": rep.steps_reexecuted,
+            "migrations": rep.migrations,
+            "restores": rep.restores,
+            "checkpoints": rep.checkpoints,
+            "train_time_s": round(rep.train_time_s, 4),
+            "ft_time_s": round(rep.ft_time_s, 4),
+            "overhead_fraction": round(rep.overhead_fraction, 6),
+        }))
+    else:
+        print(f"steps={rep.steps_run} reexec={rep.steps_reexecuted} "
+              f"migrations={rep.migrations} restores={rep.restores} "
+              f"checkpoints={rep.checkpoints}")
+        print(f"train={rep.train_time_s:.2f}s ft={rep.ft_time_s:.3f}s "
+              f"overhead={100*rep.overhead_fraction:.1f}%")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+"""Live orchestration: supervise real processes, plan with the simulator.
+
+The fifth subsystem. Everything before it bills hypothetical campaigns;
+this package actually launches, kills, restarts and migrates worker
+processes, with the existing simulator demoted to the planning oracle
+the daemon consults (strategy choice, predicted makespan, drift
+re-planning) and the existing detector/strategy/trace axes reused
+unforked at runtime.
+
+    from repro.orchestrator import registry          # the injector axis
+    from repro.orchestrator.daemon import OrchestratorDaemon
+    from repro.orchestrator.plan import make_live_plan
+
+Exports resolve lazily — importing the package never pulls asyncio,
+subprocess or jax, so the worker subprocess and the ``launch/``
+entrypoints can import the exit-code contract for free.
+"""
+from __future__ import annotations
+
+from repro.orchestrator import registry
+from repro.orchestrator.contract import (
+    EXIT_FAULT_INJECTED,
+    EXIT_NAMES,
+    EXIT_OK,
+    EXIT_PREEMPTED,
+    EXIT_STALLED,
+    classify_exit,
+)
+
+_LAZY = {
+    "Spool": ("repro.orchestrator.spool", "Spool"),
+    "Injector": ("repro.orchestrator.injector", "Injector"),
+    "Injection": ("repro.orchestrator.injector", "Injection"),
+    "OrchestratorDaemon": ("repro.orchestrator.daemon", "OrchestratorDaemon"),
+    "SubprocessLauncher": ("repro.orchestrator.daemon", "SubprocessLauncher"),
+    "WorkerHandle": ("repro.orchestrator.daemon", "WorkerHandle"),
+    "LiveReport": ("repro.orchestrator.daemon", "LiveReport"),
+    "LivePlan": ("repro.orchestrator.plan", "LivePlan"),
+    "make_live_plan": ("repro.orchestrator.plan", "make_live_plan"),
+    "choose_strategy": ("repro.orchestrator.plan", "choose_strategy"),
+    "DriftMonitor": ("repro.orchestrator.plan", "DriftMonitor"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)
+
+
+__all__ = [
+    "EXIT_FAULT_INJECTED",
+    "EXIT_NAMES",
+    "EXIT_OK",
+    "EXIT_PREEMPTED",
+    "EXIT_STALLED",
+    "classify_exit",
+    "registry",
+    *sorted(_LAZY),
+]

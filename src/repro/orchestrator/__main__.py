@@ -1,0 +1,5 @@
+import sys
+
+from repro.orchestrator.cli import main
+
+sys.exit(main())

@@ -1,0 +1,46 @@
+"""The worker exit-code contract: how a supervised process says why it died.
+
+Shepherd-style supervision needs a machine-readable death certificate —
+scraping stdout is how orphaned restarts happen. Every process the
+daemon launches (``repro.orchestrator.worker``, and the ``launch/``
+entrypoints when run under supervision) exits with one of these codes:
+
+=====================  ====  =================================================
+``EXIT_OK``               0  finished its assigned work (or clean idle exit)
+``EXIT_FAULT_INJECTED``  42  told to die by the fault injector (``die`` cmd)
+``EXIT_STALLED``         43  the process detected its own stall and aborted
+``EXIT_PREEMPTED``       44  daemon-initiated shutdown (``stop`` cmd)
+=====================  ====  =================================================
+
+Negative return codes are POSIX signal deaths (``-9`` = SIGKILL'ed by
+the injector, ``-19``/``-23`` = SIGSTOP'ed and later reaped); the daemon
+maps those onto fault/stall causes via :func:`classify_exit`.
+
+This module is import-light on purpose (constants only) so ``launch/``
+can document its contract without pulling the async daemon stack.
+"""
+from __future__ import annotations
+
+EXIT_OK = 0
+EXIT_FAULT_INJECTED = 42
+EXIT_STALLED = 43
+EXIT_PREEMPTED = 44
+
+EXIT_NAMES = {
+    EXIT_OK: "ok",
+    EXIT_FAULT_INJECTED: "fault-injected",
+    EXIT_STALLED: "stalled",
+    EXIT_PREEMPTED: "preempted",
+}
+
+
+def classify_exit(code: int) -> str:
+    """Map a raw process return code onto the typed contract.
+
+    Unknown positive codes are crashes; negative codes are signal deaths
+    (SIGKILL = injected kill, SIGSTOP/SIGSTKFLT reaps = stall)."""
+    if code in EXIT_NAMES:
+        return EXIT_NAMES[code]
+    if code < 0:  # -signum, as subprocess reports signal deaths
+        return "fault-injected" if code == -9 else "stalled"
+    return "crashed"

@@ -327,6 +327,28 @@ def _genome_campaign() -> ScenarioSpec:
     )
 
 
+def _live_genome_single() -> ScenarioSpec:
+    """The live-orchestration certification campaign: a one-hour genome
+    job with ONE unannounced mid-run failure (a burst of k=1 at minute
+    37.5 — deliberately *between* the 15-minute checkpoint marks, so
+    checkpoint-invalidation billing never enters) and a repair returning
+    the victim to the pool. Small enough that the orchestrator daemon
+    replays it against real worker processes in under a minute of scaled
+    wall time; the bench asserts live makespan ≈ engine-predicted
+    makespan on this exact (spec, seed) trial."""
+    return ScenarioSpec(
+        name="live_genome_single",
+        n_nodes=4,
+        n_spares=2,
+        horizon_s=3600.0,
+        period_s=900.0,
+        processes=[FailureProcessSpec("burst", {"t": 2250.0, "k": 1})],
+        repair_s=1200.0,
+        workload="genome_search",
+        description="live-cert campaign: genome job, single injected mid-window failure",
+    )
+
+
 def _llm_pretrain_storm() -> ScenarioSpec:
     """State-heavy extreme: a data-parallel LLM pre-training fleet whose
     recovery payload is the full optimizer state (``train_llm`` workload —
@@ -414,6 +436,7 @@ for _f in (
     _fleet_stress,
     _multi_window_storm,
     _genome_campaign,
+    _live_genome_single,
     _llm_pretrain_storm,
     _decode_fleet_churn,
 ):

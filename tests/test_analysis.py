@@ -23,7 +23,7 @@ FIXTURES = REPO / "tests" / "fixtures" / "analysis"
 NO_EXCLUDE = ("--exclude", "*/__none__/*")
 
 RULE_FAMILIES = ("traced-purity", "parity-coverage", "registry-completeness",
-                 "units-s", "dtype-x64")
+                 "units-s", "dtype-x64", "no-wallclock-in-sim")
 
 #: fixture file -> (rule that must fire, symbol of the expected finding)
 CORPUS = {
@@ -34,6 +34,7 @@ CORPUS = {
     "bad_registry.py": ("registry-completeness", "_orphan"),
     "bad_units.py": ("units-s", "Window.duration"),
     "bad_dtype.py": ("dtype-x64", "zeros"),
+    "bad_wallclock.py": ("no-wallclock-in-sim", "time.monotonic"),
 }
 
 

@@ -339,7 +339,7 @@ def test_bench_record_schema():
         pytest.skip("no BENCH_scenarios.json at repo root (bench not yet run)")
     with open(path) as f:
         rec = json.load(f)
-    assert rec["schema_version"] == 3
+    assert rec["schema_version"] == 4
     assert isinstance(rec["seeds_per_s"], (int, float)) and rec["seeds_per_s"] > 0
     assert {"montecarlo", "trajectory", "fleet", "min_required"} <= set(rec["speedup"])
     assert rec["trace_parity"] is True
@@ -359,3 +359,11 @@ def test_bench_record_schema():
     for strat, per in traffic["slo"].items():
         for asc, cell in per.items():
             assert {"p50_s", "p99_s", "dropped_mean", "availability_mean"} <= set(cell)
+    # v4: the live-orchestrator block — live vs predicted makespan per
+    # strategy (kill injector) and per registered injector
+    orch = rec["orchestrator"]
+    assert orch["scenario"] == "live_genome_single"
+    assert {"none", "kill", "stall", "slow"} <= set(orch["injectors"])
+    for strat, cell in orch["strategies"].items():
+        assert cell["survived"] is True
+        assert {"live_total_s", "predicted_total_s", "rel_err"} <= set(cell)
